@@ -1,0 +1,68 @@
+"""Kernel micro-benchmarks: fused RBF matvec and attention impls.
+
+On this CPU container the *chunked* implementations are the deployable
+path and the Pallas kernels run in interpret mode (correctness only — its
+timing is not meaningful).  We benchmark chunked vs reference
+(materialize-K) to show the fusion trade: the fused path trades O(n²)
+memory for recomputed distances, and multi-RHS amortization (the A·W
+refresh) is measured directly.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, log, timed
+from repro.kernels import ops
+
+
+def run(n=2048, d=784):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    v1 = jnp.asarray(rng.standard_normal((n, 1)), jnp.float32)
+    v8 = jnp.asarray(rng.standard_normal((n, 8)), jnp.float32)
+
+    _, t_ref = timed(
+        lambda: ops.rbf_matvec(x, v1, 2.0, 3.0, impl="reference"),
+        warmup=1, repeats=3,
+    )
+    _, t_chunk = timed(
+        lambda: ops.rbf_matvec(x, v1, 2.0, 3.0, impl="chunked", block=512),
+        warmup=1, repeats=3,
+    )
+    _, t_chunk8 = timed(
+        lambda: ops.rbf_matvec(x, v8, 2.0, 3.0, impl="chunked", block=512),
+        warmup=1, repeats=3,
+    )
+    flops = 2.0 * n * n * d
+    log(f"[kern] rbf n={n} d={d}: reference {t_ref*1e3:.1f}ms "
+        f"chunked {t_chunk*1e3:.1f}ms  8-rhs {t_chunk8*1e3:.1f}ms "
+        f"(amortization x{8*t_chunk/t_chunk8:.1f})")
+    emit("kernel/rbf_reference", t_ref * 1e6, f"gflops={flops/t_ref/1e9:.1f}")
+    emit("kernel/rbf_chunked", t_chunk * 1e6, f"gflops={flops/t_chunk/1e9:.1f}")
+    emit("kernel/rbf_chunked_8rhs", t_chunk8 * 1e6,
+         f"amortization={8*t_chunk/t_chunk8:.2f}")
+
+    # attention: chunked (linear memory) vs reference at prefill shape
+    b, h, hkv, s, dh = 1, 8, 2, 2048, 64
+    q = jnp.asarray(rng.standard_normal((b, h, s, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, hkv, s, dh)), jnp.float32)
+    vv = jnp.asarray(rng.standard_normal((b, hkv, s, dh)), jnp.float32)
+    _, t_aref = timed(
+        lambda: ops.attention(q, k, vv, causal=True, impl="reference"),
+        warmup=1, repeats=3,
+    )
+    _, t_achk = timed(
+        lambda: ops.attention(q, k, vv, causal=True, impl="chunked",
+                              block_q=256, block_k=512),
+        warmup=1, repeats=3,
+    )
+    log(f"[kern] attention s={s}: reference {t_aref*1e3:.1f}ms "
+        f"chunked {t_achk*1e3:.1f}ms")
+    emit("kernel/attn_reference", t_aref * 1e6, "")
+    emit("kernel/attn_chunked", t_achk * 1e6, "")
+
+
+if __name__ == "__main__":
+    run()

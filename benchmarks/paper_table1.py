@@ -1,0 +1,90 @@
+"""Paper Table 1 — Cholesky vs CG vs def-CG(8,12) over the Newton sequence.
+
+Reports, per Newton iteration: log p(y|f), relative error δ vs the
+Cholesky (exact) column, and cumulative solver time — the paper's exact
+columns, at a CPU-feasible n (paper: 36 551; here REPRO_BENCH_N).
+Validation criteria (EXPERIMENTS.md §Paper-validation P1/P2):
+  * all three solvers agree on log p(y|f) to ~solver tolerance;
+  * def-CG uses fewer iterations than CG from the 2nd system on;
+  * both iterative solvers beat cumulative Cholesky time.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import emit, gpc_problem, log
+from repro.core import RecycleManager
+from repro.gp import laplace_gpc
+
+
+def run(n=None):
+    x, y, kernel = gpc_problem(n)
+    n = x.shape[0]
+    kd = kernel.gram(x)
+    jax.block_until_ready(kd)
+    log(f"[table1] n={n}, dense K materialized (paper setup)")
+
+    results = {}
+    for solver in ("cholesky", "cg", "defcg"):
+        recycle = (
+            RecycleManager(k=8, ell=12, refresh_aw="exact")
+            if solver == "defcg" else None
+        )
+        t0 = time.perf_counter()
+        res = laplace_gpc(
+            x, y, kernel,
+            solver=solver, recycle=recycle,
+            solver_tol=1e-5, newton_tol=1.0,
+            k_dense=kd, dense_matvec=True,
+        )
+        wall = time.perf_counter() - t0
+        results[solver] = (res, wall)
+        log(f"[table1] {solver}: newtons={len(res.trace.logp)} "
+            f"logp={res.logp:.3f} solver_time={res.trace.cumulative_time[-1]:.2f}s")
+
+    chol, cgr, defr = (results[s][0] for s in ("cholesky", "cg", "defcg"))
+    log("\nit |  chol logp  t[s] |    cg logp     δ      iters  t[s] |"
+        "   defcg logp    δ      iters  t[s]")
+    rows = max(len(chol.trace.logp), len(cgr.trace.logp), len(defr.trace.logp))
+    for i in range(rows):
+        def cell(res, want_iters):
+            if i >= len(res.trace.logp):
+                return "", "", "", ""
+            lp = res.trace.logp[i]
+            delta = abs(lp - chol.trace.logp[min(i, len(chol.trace.logp) - 1)]) / abs(
+                chol.trace.logp[min(i, len(chol.trace.logp) - 1)]
+            )
+            iters = res.trace.solver_iterations[i] if want_iters else ""
+            return lp, delta, iters, res.trace.cumulative_time[i]
+
+        lp_c, _, _, t_c = cell(chol, False)
+        lp_g, d_g, it_g, t_g = cell(cgr, True)
+        lp_d, d_d, it_d, t_d = cell(defr, True)
+        log(f"{i+1:2d} | {lp_c:11.3f} {t_c:5.1f} | {lp_g:11.3f} {d_g:.2e} "
+            f"{it_g:5} {t_g:5.1f} | {lp_d:11.3f} {d_d:.2e} {it_d:5} {t_d:5.1f}")
+
+    # CSV + validation
+    cg_iters = sum(cgr.trace.solver_iterations[1:])
+    def_iters = sum(defr.trace.solver_iterations[1:])
+    saving = 1.0 - def_iters / max(cg_iters, 1)
+    emit("table1/cholesky_total", results["cholesky"][0].trace.cumulative_time[-1] * 1e6,
+         f"newtons={len(chol.trace.logp)}")
+    emit("table1/cg_total", cgr.trace.cumulative_time[-1] * 1e6,
+         f"iters={sum(cgr.trace.solver_iterations)}")
+    emit("table1/defcg_total", defr.trace.cumulative_time[-1] * 1e6,
+         f"iters={sum(defr.trace.solver_iterations)};iter_saving={saving:.1%}")
+    agreement = max(
+        abs(cgr.logp - chol.logp) / abs(chol.logp),
+        abs(defr.logp - chol.logp) / abs(chol.logp),
+    )
+    emit("table1/validation", 0.0,
+         f"agreement={agreement:.2e};P2_saving={saving:.1%};"
+         f"P2_pass={saving > 0.15}")
+    return saving
+
+
+if __name__ == "__main__":
+    run()

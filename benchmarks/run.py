@@ -1,0 +1,72 @@
+"""Benchmark harness — one entry per paper table/figure + system benches.
+
+Prints ``name,us_per_call,derived`` CSV to stdout (human logs on stderr).
+Sections:
+  table1   — paper Table 1 (Cholesky/CG/def-CG Newton trace)
+  fig2/3   — paper Fig 2 (iterations/system) + Fig 3 (residual slopes)
+  fig4     — paper Fig 4 (inducing-point cost/precision)
+  micro    — controlled-spectrum κ_eff validation (paper §2.1)
+  hf       — Hessian-free recycling at mini-LM scale
+  kernel   — fused-kernel micro-benchmarks
+  roofline — dry-run derived roofline table (if artifacts exist)
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks.common import emit, log
+
+    sections = []
+
+    def section(name, fn):
+        log(f"\n===== {name} =====")
+        try:
+            fn()
+            sections.append((name, "ok"))
+        except Exception as exc:  # noqa: BLE001
+            traceback.print_exc()
+            emit(f"{name}/FAILED", 0.0, repr(exc)[:80])
+            sections.append((name, f"FAILED: {exc!r}"))
+
+    from benchmarks import (
+        hf_recycle_bench,
+        kernel_bench,
+        paper_fig4,
+        paper_fig23,
+        paper_table1,
+        solver_microbench,
+    )
+
+    section("table1", paper_table1.run)
+    section("fig2+3", paper_fig23.run)
+    section("fig4", paper_fig4.run)
+    section("micro", solver_microbench.run)
+    section("hf", hf_recycle_bench.run)
+    section("kernel", kernel_bench.run)
+
+    art = os.path.join(os.path.dirname(__file__), "../artifacts/dryrun")
+    if os.path.isdir(art) and os.listdir(art):
+        def roofline_section():
+            from repro.launch import roofline
+
+            table = roofline.table(art, mesh="single")
+            log(table)
+            n_rows = table.count("\n") - 1
+            emit("roofline/cells", 0.0, f"rows={n_rows}")
+
+        section("roofline", roofline_section)
+
+    log("\n===== summary =====")
+    for name, status in sections:
+        log(f"{name:10s} {status}")
+    if any(s != "ok" for _, s in sections):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

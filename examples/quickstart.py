@@ -1,0 +1,50 @@
+"""Quickstart: Krylov subspace recycling on a sequence of SPD systems.
+
+The paper in 40 lines: solve A⁽ⁱ⁾x = b⁽ⁱ⁾ for a slowly drifting SPD
+family; def-CG(k, ell) recycles harmonic-Ritz vectors between systems and
+needs fewer iterations than cold CG from system 2 on.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import RecycleManager, cg, from_matrix  # noqa: E402
+
+rng = np.random.default_rng(0)
+n, k, ell = 256, 8, 12
+
+# An SPD family with 8 large outlier eigenvalues that drift slowly —
+# the situation of a Newton/Gauss-Newton outer loop near convergence.
+q, _ = np.linalg.qr(rng.standard_normal((n, n)))
+eigs = np.concatenate([np.linspace(1, 8, n - k), np.logspace(3, 5, k)])
+base = (q * eigs) @ q.T
+
+mgr = RecycleManager(k=k, ell=ell, tol=1e-8, maxiter=5000)
+x_warm = None
+print(f"{'system':>6} {'cold CG':>8} {'def-CG':>7} {'saving':>7}")
+for i in range(6):
+    drift = rng.standard_normal((n, n)) * 0.02
+    a_i = jnp.asarray(base + drift @ drift.T)
+    b_i = jnp.asarray(rng.standard_normal(n))
+
+    cold = cg(from_matrix(a_i), b_i, tol=1e-8, maxiter=5000)
+    res = mgr.solve(from_matrix(a_i), b_i, x0=x_warm)
+    x_warm = res.x
+
+    ci, di = int(cold.info.iterations), int(res.info.iterations)
+    print(f"{i + 1:>6} {ci:>8} {di:>7} {1 - di / ci:>6.0%}")
+
+    # both solve the same system
+    np.testing.assert_allclose(
+        np.asarray(a_i @ res.x), np.asarray(b_i),
+        atol=1e-6 * float(jnp.linalg.norm(b_i)),
+    )
+
+print("\nRitz values tracked by the recycled basis (≈ outlier eigenvalues):")
+print(np.sort(np.asarray(mgr.theta))[::-1].round(1))
+print("true outliers:", np.sort(eigs[-k:])[::-1].round(1))

@@ -1,0 +1,9 @@
+"""repro.checkpoint — atomic, versioned, mesh-elastic checkpoints."""
+
+from repro.checkpoint.manager import (
+    CheckpointManager,
+    restore_pytree,
+    save_pytree,
+)
+
+__all__ = ["CheckpointManager", "restore_pytree", "save_pytree"]

@@ -1,0 +1,176 @@
+"""Fault-tolerant checkpointing: atomic, versioned, mesh-elastic.
+
+Layout:  <dir>/step_<n>/arrays.npz + manifest.json, committed by writing
+into ``step_<n>.tmp`` and ``os.replace``-ing into place (atomic on POSIX) —
+a host dying mid-write can only ever leave a ``.tmp`` turd, never a
+half-valid checkpoint.  ``restore_latest`` walks checkpoints newest-first
+and skips unreadable/incomplete ones (corrupt-tail tolerance).
+
+Elasticity: arrays are stored mesh-agnostically (plain host numpy).  On
+restore, pass ``shardings`` built from the *current* mesh and every array
+is ``device_put`` with its new layout — restoring a 256-chip checkpoint
+onto 512 chips (or onto 1 CPU) is the same call.  The solver recycle
+basis W (optimizer state) rides along like any other pytree, so def-CG's
+"computational transfer learning" state survives preemption too.
+
+A background-thread async mode overlaps serialization with the next train
+step (``save(..., blocking=False)``); ``wait()`` joins before the next
+save to bound memory.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+_SEP = "|"
+
+
+def _flatten_with_names(tree: Pytree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names, leaves = [], []
+    for path, leaf in flat:
+        names.append(jax.tree_util.keystr(path))
+        leaves.append(leaf)
+    return names, leaves, treedef
+
+
+def save_pytree(tree: Pytree, directory: str, step: int, extra: Optional[dict] = None):
+    """Atomically write one checkpoint; returns its final path."""
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+
+    names, leaves, _ = _flatten_with_names(tree)
+    arrays = {}
+    dtypes = {}
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(leaf)
+        dtypes[f"a{i}"] = str(arr.dtype)
+        if arr.dtype.kind == "V" or str(arr.dtype) == "bfloat16":
+            arr = arr.astype(np.float32)  # widen non-npz dtypes losslessly
+        arrays[f"a{i}"] = arr
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "names": names,
+        "count": len(names),
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def restore_pytree(
+    template: Pytree,
+    path: str,
+    shardings: Optional[Pytree] = None,
+) -> Pytree:
+    """Restore into the structure of ``template``; optionally re-shard every
+    leaf onto the current mesh (elastic restore)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    names, t_leaves, treedef = _flatten_with_names(template)
+    if manifest["names"] != names:
+        raise ValueError(
+            "checkpoint/template structure mismatch: "
+            f"{len(manifest['names'])} vs {len(names)} leaves"
+        )
+    leaves = []
+    s_leaves = (
+        jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding)
+        )
+        if shardings is not None
+        else [None] * len(names)
+    )
+    for i, (tmpl, shd) in enumerate(zip(t_leaves, s_leaves)):
+        arr = data[f"a{i}"]
+        if hasattr(tmpl, "dtype"):
+            import ml_dtypes  # noqa: F401 — registers bf16 numpy casts
+
+            arr = arr.astype(np.dtype(tmpl.dtype))
+        if shd is not None:
+            leaves.append(jax.device_put(arr, shd))
+        else:
+            leaves.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    """Versioned checkpoints with retention, resume, and async writes."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # -- writing ----------------------------------------------------------
+    def save(self, tree: Pytree, step: int, *, extra: Optional[dict] = None,
+             blocking: bool = True):
+        tree = jax.device_get(tree)  # snapshot before the next step mutates
+
+        def work():
+            save_pytree(tree, self.directory, step, extra)
+            self._gc()
+
+        if blocking:
+            work()
+        else:
+            self.wait()
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # -- reading ----------------------------------------------------------
+    def steps(self):
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    out.append(int(name.split("_")[1]))
+                except ValueError:
+                    continue
+        return sorted(out)
+
+    def restore_latest(
+        self, template: Pytree, shardings: Optional[Pytree] = None
+    ):
+        """Newest restorable checkpoint (corrupt tails skipped) or None."""
+        self.wait()
+        for step in reversed(self.steps()):
+            path = os.path.join(self.directory, f"step_{step:08d}")
+            try:
+                tree = restore_pytree(template, path, shardings)
+                with open(os.path.join(path, "manifest.json")) as f:
+                    extra = json.load(f).get("extra", {})
+                return step, tree, extra
+            except Exception:
+                continue  # corrupt/incomplete — try the previous one
+        return None
+
+    def _gc(self):
+        steps = self.steps()
+        for step in steps[: -self.keep]:
+            shutil.rmtree(
+                os.path.join(self.directory, f"step_{step:08d}"),
+                ignore_errors=True,
+            )

@@ -1,0 +1,22 @@
+"""repro.configs — one module per assigned architecture (+ the paper's own
+GPC workload).  Use `repro.configs.registry.get_config(arch_id)`."""
+
+from repro.configs.registry import (
+    ARCH_IDS,
+    SHAPES,
+    ShapeSpec,
+    get_config,
+    get_smoke_config,
+    grid,
+    shape_applicable,
+)
+
+__all__ = [
+    "ARCH_IDS",
+    "SHAPES",
+    "ShapeSpec",
+    "get_config",
+    "get_smoke_config",
+    "grid",
+    "shape_applicable",
+]

@@ -1,0 +1,32 @@
+"""gpc-mnist — the paper's own workload as a distributed config.
+
+Laplace-approximation GP classification on the (synthetic) infinite-digits
+3-vs-5 task: n data points sharded row-wise over the mesh, the fused RBF
+Gram matvec as the CG hot-spot, def-CG(k, ell) with harmonic-Ritz
+recycling across the Newton sequence.  `n` here is paper-scale; the CPU
+benchmarks shrink it via `replace(n=...)`.
+"""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class GPCConfig:
+    name: str = "gpc-mnist"
+    n: int = 1_048_576          # paper-scale row count (2^20)
+    d: int = 784
+    theta: float = 3.0
+    lengthscale: float = 3.0
+    solver: str = "defcg"
+    k: int = 8                  # recycled subspace size — def-CG(8, 12)
+    ell: int = 12
+    tol: float = 1e-5
+    maxiter: int = 200
+    newton_tol: float = 1.0
+    max_newton: int = 12
+    dtype: str = "float32"
+    block: int = 1024           # fused-matvec row block
+
+
+CONFIG = GPCConfig()
+SMOKE = GPCConfig(name="gpc-smoke", n=256, maxiter=400, dtype="float64")

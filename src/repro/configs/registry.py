@@ -1,0 +1,77 @@
+"""Architecture registry: ``--arch <id>`` resolution + shape grid.
+
+Every assigned architecture registers (full config, reduced smoke config).
+The shape grid (train_4k / prefill_32k / decode_32k / long_500k) and the
+per-arch skip rules (DESIGN.md §4) live here so the dry-run, benchmarks
+and tests share one source of truth.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.models.config import ModelConfig
+
+_ARCH_MODULES = {
+    "mamba2-1.3b": "repro.configs.mamba2_1_3b",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "starcoder2-3b": "repro.configs.starcoder2_3b",
+    "stablelm-12b": "repro.configs.stablelm_12b",
+    "qwen3-8b": "repro.configs.qwen3_8b",
+    "qwen1.5-0.5b": "repro.configs.qwen1_5_0_5b",
+    "jamba-v0.1-52b": "repro.configs.jamba_v0_1_52b",
+    "chameleon-34b": "repro.configs.chameleon_34b",
+    "seamless-m4t-large-v2": "repro.configs.seamless_m4t_large_v2",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(_ARCH_MODULES[arch])
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(_ARCH_MODULES[arch])
+    return mod.SMOKE
+
+
+def is_subquadratic(cfg: ModelConfig) -> bool:
+    """SSM / hybrid stacks handle 512k decode; pure attention does not."""
+    return cfg.family in ("ssm", "hybrid")
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """Skip rules per spec: long_500k only for sub-quadratic mixers."""
+    if shape.name == "long_500k" and not is_subquadratic(cfg):
+        return False, "pure full-attention arch — 512k decode skipped (DESIGN.md §4)"
+    return True, ""
+
+
+def grid():
+    """All (arch, shape) dry-run cells with skip annotations."""
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            ok, why = shape_applicable(cfg, shape)
+            yield arch, cfg, shape, ok, why

@@ -1,0 +1,54 @@
+"""repro.core — the paper's contribution: recycled Krylov solvers for
+sequences of SPD systems, pytree-native and pjit-shardable."""
+
+from repro.core.operators import (
+    GGNOperator,
+    KernelSystemOperator,
+    LinearOperator,
+    from_callable,
+    from_matrix,
+    materialize,
+)
+from repro.core.preconditioners import (
+    jacobi,
+    nystrom_preconditioner,
+    randomized_nystrom,
+)
+from repro.core.recycle import (
+    RecycleManager,
+    harmonic_ritz,
+    random_orthonormal_basis,
+    recycled_solve_jit,
+)
+from repro.core.solvers import (
+    CGResult,
+    RecycleData,
+    SolveInfo,
+    cg,
+    cholesky_solve,
+    defcg,
+    deflated_initial_guess,
+)
+
+__all__ = [
+    "GGNOperator",
+    "KernelSystemOperator",
+    "LinearOperator",
+    "from_callable",
+    "from_matrix",
+    "materialize",
+    "jacobi",
+    "nystrom_preconditioner",
+    "randomized_nystrom",
+    "RecycleManager",
+    "harmonic_ritz",
+    "random_orthonormal_basis",
+    "recycled_solve_jit",
+    "CGResult",
+    "RecycleData",
+    "SolveInfo",
+    "cg",
+    "cholesky_solve",
+    "defcg",
+    "deflated_initial_guess",
+]

@@ -1,0 +1,207 @@
+"""Matrix-free symmetric positive-definite linear operators.
+
+The solvers in :mod:`repro.core.solvers` only ever touch ``A`` through
+``A @ v`` (a matvec on a pytree).  This module provides the operator
+abstraction plus the concrete operators the framework uses:
+
+* :func:`from_matrix` — an explicit dense matrix (tests / small problems);
+* :class:`KernelSystemOperator` — the paper's GP-classification Newton
+  system ``A = I + H^{1/2} K H^{1/2}`` (Eq. 10), matrix-free over the fused
+  Gram-matvec kernel so the ``n x n`` Gram matrix is never materialized;
+* :class:`GGNOperator` — damped Gauss-Newton matvec through an arbitrary
+  model (``G v = Jᵀ H_L J v + λ v`` via ``jvp``/``vjp``), the Hessian-free
+  workhorse that carries the paper's technique to LM-scale training;
+* shift/scale/sum composition helpers.
+
+Operators are registered as pytree nodes so they can cross ``jit``
+boundaries as arguments.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.flatten_util
+import jax.numpy as jnp
+
+from repro.core import pytree as pt
+
+Pytree = Any
+Matvec = Callable[[Pytree], Pytree]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class LinearOperator:
+    """A symmetric (PSD in intended use) linear operator ``v ↦ A v``.
+
+    Attributes:
+      matvec: the matvec closure.  Must be pure and jit-compatible.
+      matvec_cost_flops: optional static estimate of flops per matvec,
+        used by benchmark accounting (``None`` → unknown).
+    """
+
+    matvec: Matvec
+    matvec_cost_flops: Optional[float] = None
+
+    def __call__(self, v: Pytree) -> Pytree:
+        return self.matvec(v)
+
+    def __matmul__(self, v: Pytree) -> Pytree:
+        return self.matvec(v)
+
+    # -- composition ------------------------------------------------------
+    def shifted(self, sigma) -> "LinearOperator":
+        """``A + sigma I``."""
+
+        def mv(v, base=self.matvec):
+            return pt.tree_axpy(sigma, v, base(v))
+
+        return LinearOperator(mv, self.matvec_cost_flops)
+
+    def scaled(self, c) -> "LinearOperator":
+        def mv(v, base=self.matvec):
+            return pt.tree_scale(c, base(v))
+
+        return LinearOperator(mv, self.matvec_cost_flops)
+
+    def __add__(self, other: "LinearOperator") -> "LinearOperator":
+        def mv(v, a=self.matvec, b=other.matvec):
+            return pt.tree_add(a(v), b(v))
+
+        cost = None
+        if self.matvec_cost_flops is not None and other.matvec_cost_flops is not None:
+            cost = self.matvec_cost_flops + other.matvec_cost_flops
+        return LinearOperator(mv, cost)
+
+    # -- pytree protocol ---------------------------------------------------
+    def tree_flatten(self):
+        return (), (self.matvec, self.matvec_cost_flops)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del children
+        return cls(*aux)
+
+
+def from_matrix(mat: jnp.ndarray) -> LinearOperator:
+    """Explicit dense SPD matrix as an operator over flat ``(n,)`` vectors."""
+    n = mat.shape[0]
+
+    def mv(v):
+        return mat @ v
+
+    return LinearOperator(mv, matvec_cost_flops=2.0 * n * n)
+
+
+def from_callable(fn: Matvec, cost: Optional[float] = None) -> LinearOperator:
+    return LinearOperator(fn, cost)
+
+
+# ---------------------------------------------------------------------------
+# The paper's Newton-system operator (GP classification, Eq. 10)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class KernelSystemOperator:
+    """``A v = v + H^{1/2} · K (H^{1/2} · v)`` — Kuss–Rasmussen restructuring.
+
+    ``kernel_matvec`` computes ``K u`` matrix-free (fused Pallas kernel on
+    TPU, chunked-jnp elsewhere); ``sqrt_h`` is the elementwise vector
+    ``H^{1/2}`` (H diagonal for logistic likelihood).  Eigenvalues of ``A``
+    are confined to ``[1, n·max(K)/4]`` which is what makes CG and def-CG
+    well behaved on this family (paper §3).
+    """
+
+    kernel_matvec: Matvec
+    sqrt_h: jnp.ndarray
+    matvec_cost_flops: Optional[float] = None
+
+    def matvec(self, v):
+        return v + self.sqrt_h * self.kernel_matvec(self.sqrt_h * v)
+
+    def __call__(self, v):
+        return self.matvec(v)
+
+    def __matmul__(self, v):
+        return self.matvec(v)
+
+    def tree_flatten(self):
+        return (self.sqrt_h,), (self.kernel_matvec, self.matvec_cost_flops)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        (sqrt_h,) = children
+        kernel_matvec, cost = aux
+        return cls(kernel_matvec, sqrt_h, cost)
+
+
+# ---------------------------------------------------------------------------
+# Gauss-Newton operator — Hessian-free optimization at LM scale
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class GGNOperator:
+    """Damped generalized Gauss-Newton matvec ``(Jᵀ H_L J + λ I) v``.
+
+    ``model_fn(params) -> outputs`` is the network up to its final linear
+    outputs; ``loss_hvp(outputs, tangent_out) -> tangent_out'`` applies the
+    (tiny, typically diagonal or per-token-softmax) loss Hessian.  The GGN
+    is SPD for convex losses, which is exactly the setting def-CG needs.
+
+    One matvec = one ``jvp`` + one loss-Hessian apply + one ``vjp`` —
+    roughly 3x a forward pass, entirely expressible in XLA so the full
+    Hessian-free step (def-CG loop included) jits and shards under pjit.
+    """
+
+    model_fn: Callable[[Pytree], Pytree]
+    loss_hvp: Callable[[Pytree, Pytree], Pytree]
+    params: Pytree
+    damping: jnp.ndarray = dataclasses.field(default_factory=lambda: jnp.float32(0.0))
+    matvec_cost_flops: Optional[float] = None
+
+    def matvec(self, v: Pytree) -> Pytree:
+        outputs, jv = jax.jvp(self.model_fn, (self.params,), (v,))
+        hjv = self.loss_hvp(outputs, jv)
+        _, vjp_fn = jax.vjp(self.model_fn, self.params)
+        (gv,) = vjp_fn(hjv)
+        return pt.tree_axpy(self.damping, v, gv)
+
+    def __call__(self, v):
+        return self.matvec(v)
+
+    def __matmul__(self, v):
+        return self.matvec(v)
+
+    def tree_flatten(self):
+        return (self.params, self.damping), (
+            self.model_fn,
+            self.loss_hvp,
+            self.matvec_cost_flops,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        params, damping = children
+        model_fn, loss_hvp, cost = aux
+        return cls(model_fn, loss_hvp, params, damping, cost)
+
+
+def materialize(op, template: Pytree) -> jnp.ndarray:
+    """Densify a small operator (tests only): returns the matrix of ``op``
+    in the coordinate system of ``template``'s raveled pytree."""
+    flat, unravel = jax.flatten_util.ravel_pytree(template)
+    n = flat.shape[0]
+
+    def col(i):
+        e = unravel(jnp.zeros_like(flat).at[i].set(1.0))
+        out, _ = jax.flatten_util.ravel_pytree(op(e))
+        return out
+
+    return jax.vmap(col, out_axes=1)(jnp.arange(n))

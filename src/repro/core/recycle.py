@@ -1,0 +1,335 @@
+"""Krylov subspace recycling: harmonic-Ritz extraction + cross-system state.
+
+This is the paper's §2.3.  After def-CG solves system ``i`` we have
+
+    Z  = [W, P_ell]        (k + ell stacked vectors)
+    AZ = [AW, AP_ell]
+
+and the harmonic projection (Morgan 1995) asks for ``(θ, u)`` with
+
+    (AZ)ᵀ (AZ u − θ Z u) = 0    ⇔    G u = θ F u,
+    G = (AZ)ᵀ(AZ)  (SPD),   F = (AZ)ᵀ Z = ZᵀAZ  (symmetric for A = Aᵀ).
+
+We reduce the generalized problem with a Cholesky of ``G``:
+
+    G = LLᵀ,  w = Lᵀu :   (L⁻¹ F L⁻ᵀ) w = (1/θ) w,
+
+a small ``(k+ell)²`` symmetric eigenproblem solved identically (replicated)
+on every device — far cheaper than any distributed scheme at these sizes.
+The k selected Ritz vectors ``W' = Z U`` (and ``A W' = AZ · U``, free) are
+the recycled deflation space for the *next* system in the sequence.
+
+Column equilibration: the generalized eigenproblem is invariant under
+column scaling ``Z → Z D`` (``G → DGD``, ``F → DFD``, ``θ`` unchanged), so
+we scale every column to unit ``‖AZ_i‖`` before factoring — this keeps the
+Cholesky well-posed even when late CG directions have tiny norms.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pytree as pt
+from repro.core.solvers import CGResult, defcg, defcg_jit
+
+Pytree = Any
+
+
+def harmonic_ritz(
+    Z: Pytree,
+    AZ: Pytree,
+    k: int,
+    *,
+    select: str = "largest",
+    jitter: float = 1e-10,
+) -> Tuple[Pytree, Pytree, jnp.ndarray]:
+    """Extract ``k`` harmonic Ritz pairs from the basis ``Z`` (see module doc).
+
+    Args:
+      Z, AZ: stacked bases of m ≥ k vectors and their A-products.
+      k: number of Ritz vectors to keep.
+      select: ``"largest"`` (deflate the top of the spectrum — the right
+        choice for the paper's ``A = I + H½KH½`` whose spectrum clusters at
+        1 with large outliers) or ``"smallest"``.
+      jitter: relative diagonal regularization for the Cholesky of G.
+
+    Returns:
+      ``(W, AW, theta)`` — the recycled basis, its A-products, and the k
+      harmonic Ritz values (approximate eigenvalues of A).
+    """
+    m = pt.basis_size(Z)
+    if k > m:
+        raise ValueError(f"cannot extract k={k} Ritz vectors from m={m} basis")
+
+    # Normalize columns BEFORE forming the grams: late CG directions are
+    # orders of magnitude smaller than early ones, and computing ZᵀAZ at
+    # mixed scales loses the small columns' entries to rounding (observed:
+    # negative "Ritz values" from an SPD operator).  Column scaling is an
+    # exact invariance of the generalized problem, so this is free.
+    zn = jnp.sqrt(jnp.maximum(jnp.diag(pt.gram(Z, Z)), 1e-300))
+    Z = pt.basis_scale_columns(Z, 1.0 / zn)
+    AZ = pt.basis_scale_columns(AZ, 1.0 / zn)
+
+    G = pt.gram(AZ, AZ)
+    F = pt.gram(AZ, Z)
+    F = 0.5 * (F + F.T)
+
+    # Second-stage equilibration on ‖AZ_i‖.
+    d = jnp.where(jnp.diag(G) > 0, jnp.diag(G), 1.0) ** -0.5
+    G = G * d[:, None] * d[None, :]
+    F = F * d[:, None] * d[None, :]
+
+    # Rank-revealing reduction of the generalized problem: eigendecompose
+    # G and *project out* its near-null directions (near-dependent Krylov
+    # columns otherwise surface as spurious huge Ritz values; observed on
+    # long recording windows).  Projected directions get ζ = 0 exactly and
+    # the positivity filter below excludes them — shapes stay static.
+    lam, qg = jnp.linalg.eigh(G)  # ascending
+    eps = jnp.finfo(G.dtype).eps
+    rcond = jnp.maximum(jnp.asarray(jitter, G.dtype), 100.0 * eps) * m
+    good = lam > rcond * lam[-1]
+    s = jnp.where(good, 1.0 / jnp.sqrt(jnp.maximum(lam, 1e-300)), 0.0)
+    M = s[:, None] * (qg.T @ F @ qg) * s[None, :]
+    M = 0.5 * (M + M.T)
+    zeta, Wm = jnp.linalg.eigh(M)  # ascending ζ = 1/θ
+
+    # ζ ≤ 0 can only arise from rounding (A SPD ⇒ θ > 0) — never select it.
+    tiny = jnp.asarray(1e-300, zeta.dtype)
+    if select == "largest":
+        zeta_key = jnp.where(zeta > 0, zeta, jnp.inf)
+        order = jnp.argsort(zeta_key)[:k]  # smallest positive ζ → largest θ
+    elif select == "smallest":
+        zeta_key = jnp.where(zeta > 0, zeta, -jnp.inf)
+        order = jnp.argsort(zeta_key)[::-1][:k]
+    else:
+        raise ValueError(f"unknown select={select!r}")
+
+    w_sel = Wm[:, order]  # (m, k)
+    zeta_sel = zeta[order]
+    theta = 1.0 / jnp.where(jnp.abs(zeta_sel) > 1e-300, zeta_sel, 1e-300)
+
+    # u = D · Qg S w  (undo reduction and equilibration).
+    u = qg @ (s[:, None] * w_sel)
+    u = u * d[:, None]
+
+    W = pt.basis_matmul(Z, u)
+    AW = pt.basis_matmul(AZ, u)
+
+    # Normalize the recycled vectors to unit 2-norm (pure conditioning).
+    col_norms = jnp.sqrt(
+        jnp.maximum(jnp.diag(pt.gram(W, W)), jnp.finfo(u.dtype).tiny)
+    )
+    W = pt.basis_scale_columns(W, 1.0 / col_norms)
+    AW = pt.basis_scale_columns(AW, 1.0 / col_norms)
+    return W, AW, theta
+
+
+harmonic_ritz_jit = jax.jit(
+    harmonic_ritz, static_argnames=("k", "select", "jitter")
+)
+
+
+def _basis_map_maybe_jit(A, W):
+    """``A @ w_i`` for every basis vector — jitted when A is a pytree node
+    (stable-closure operators hit the jit cache), eager otherwise."""
+    try:
+        return _basis_map_jitted(A, W)
+    except TypeError:  # A is a bare callable, not a registered pytree node
+        return pt.basis_map_vectors(A, W)
+
+
+@jax.jit
+def _basis_map_jitted(A, W):
+    return pt.basis_map_vectors(A, W)
+
+
+@dataclasses.dataclass
+class RecycleManager:
+    """Carries the recycled subspace across a *sequence* of SPD systems.
+
+    This object is the paper's outer-loop state: call :meth:`solve` once per
+    system ``A⁽ⁱ⁾ x = b⁽ⁱ⁾``; it runs ``def-CG(k, ell)`` with the current
+    recycled basis (plain CG + recording for the first system), then
+    refreshes the basis by harmonic-Ritz extraction.
+
+    ``refresh_aw`` controls how ``A⁽ⁱ⁺¹⁾W`` is obtained:
+
+    * ``"exact"`` — recompute with k fresh matvecs (the O(k n²) overhead the
+      paper accounts for in §2.2).  Deflation identities hold exactly.
+    * ``"stale"`` — reuse ``A⁽ⁱ⁾W = AZ·U`` from the extraction (zero
+      matvecs; this matches the paper's ``O(n²(ℓ+1)k)`` cost accounting for
+      obtaining *both* W and AW from stored quantities).  The deflation
+      projector is then approximate — CG's own residual recurrence stays
+      exact, so the solution is still correct; only the deflation
+      *effectiveness* degrades with the drift ‖A⁽ⁱ⁺¹⁾ − A⁽ⁱ⁾‖, which is
+      precisely the stagnation the paper observes in Fig. 2.
+
+    ``reuse_aw=True`` on a call additionally declares the operator unchanged
+    since the previous solve (multiple RHS against one matrix).
+
+    The manager state (W, AW) is an ordinary pytree of device arrays: it
+    shards like the solution vector, persists on-device across systems, and
+    is checkpointable (``repro.checkpoint`` saves it with the train state).
+    """
+
+    k: int
+    ell: int
+    select: str = "largest"
+    tol: float = 1e-5
+    maxiter: int = 1000
+    waw_jitter: float = 1e-12
+    refresh_aw: str = "exact"  # "exact" | "stale" (see class docstring)
+    use_jit: bool = True
+    W: Optional[Pytree] = None
+    AW: Optional[Pytree] = None
+    theta: Optional[jnp.ndarray] = None
+    systems_solved: int = 0
+
+    def seed(self, W: Pytree, AW: Optional[Pytree] = None) -> None:
+        """Seed the recycle space a priori (e.g. Nyström vectors — the
+        paper's §1.1 'guessed projective space as first initialization')."""
+        self.W = W
+        self.AW = AW
+
+    def solve(
+        self,
+        A,
+        b: Pytree,
+        x0: Optional[Pytree] = None,
+        *,
+        reuse_aw: bool = False,
+        tol: Optional[float] = None,
+        maxiter: Optional[int] = None,
+        record_residuals: bool = False,
+    ) -> CGResult:
+        tol = self.tol if tol is None else tol
+        maxiter = self.maxiter if maxiter is None else maxiter
+
+        AW = self.AW
+        needs_fresh = (
+            self.W is not None
+            and not reuse_aw
+            and (AW is None or self.refresh_aw == "exact")
+        )
+        if needs_fresh:
+            AW = (
+                _basis_map_maybe_jit(A, self.W)
+                if self.use_jit
+                else pt.basis_map_vectors(A, self.W)
+            )
+
+        solve_fn = defcg_jit if self.use_jit else defcg
+        result = solve_fn(
+            A,
+            b,
+            x0,
+            W=self.W,
+            AW=AW,
+            ell=self.ell,
+            tol=tol,
+            maxiter=maxiter,
+            record_residuals=record_residuals,
+            waw_jitter=self.waw_jitter,
+            exact_aw=needs_fresh or reuse_aw or self.W is None,
+        )
+        refresh_cost = self.k if needs_fresh else 0
+
+        if self.W is not None and (
+            bool(result.info.breakdown) or not bool(result.info.converged)
+        ):
+            # Resilience: a stale/ill-conditioned basis can poison the
+            # conjugacy recurrences.  Drop it and re-solve clean — the
+            # sequence continues with a freshly bootstrapped space.
+            self.W = self.AW = self.theta = None
+            result = solve_fn(
+                A, b, x0,
+                ell=self.ell, tol=tol, maxiter=maxiter,
+                record_residuals=record_residuals,
+            )
+
+        if refresh_cost:
+            result = result._replace(
+                info=result.info._replace(
+                    matvecs=result.info.matvecs + refresh_cost
+                )
+            )
+        self.systems_solved += 1
+        self._refresh(result, AW)  # AW unused by _refresh when self.W is None
+        return result
+
+    # -- internal ----------------------------------------------------------
+    def _refresh(self, result: CGResult, AW: Optional[Pytree]) -> None:
+        rec = result.recycle
+        if rec is None:
+            return
+        stored = int(rec.stored)  # host sync between systems — cheap
+        if stored == 0:
+            return
+        P = pt.basis_slice(rec.P, stored)
+        AP = pt.basis_slice(rec.AP, stored)
+        if self.W is not None:
+            Z = pt.basis_concat(self.W, P)
+            AZ = pt.basis_concat(AW, AP)
+        else:
+            Z, AZ = P, AP
+        k = min(self.k, pt.basis_size(Z))
+        extract = harmonic_ritz_jit if self.use_jit else harmonic_ritz
+        self.W, self.AW, self.theta = extract(Z, AZ, k, select=self.select)
+
+
+def recycled_solve_jit(
+    A,
+    b: Pytree,
+    x0: Pytree,
+    W: Pytree,
+    *,
+    k: int,
+    ell: int,
+    tol: float,
+    maxiter: int,
+    select: str = "largest",
+) -> Tuple[Pytree, Pytree, CGResult]:
+    """Single-shot, fully traceable solve+extract for jitted outer loops.
+
+    Unlike :class:`RecycleManager` (host-driven, dynamic stored count), this
+    variant is shape-static so it can live *inside* a pjit-ed Hessian-free
+    train step: it forces ``min_iters=ell`` (all buffers valid) and always
+    deflates with the provided basis ``W`` — callers bootstrap with a random
+    orthonormal basis, which is a valid (merely unhelpful) deflation space.
+
+    Returns ``(W_next, x, result)``.
+    """
+    AW = pt.basis_map_vectors(A, W)
+    result = defcg(
+        A,
+        b,
+        x0,
+        W=W,
+        AW=AW,
+        ell=ell,
+        tol=tol,
+        maxiter=maxiter,
+        min_iters=ell,
+        waw_jitter=1e-10,
+    )
+    Z = pt.basis_concat(W, result.recycle.P)
+    AZ = pt.basis_concat(AW, result.recycle.AP)
+    W_next, _, _ = harmonic_ritz(Z, AZ, k, select=select)
+    return W_next, result.x, result
+
+
+def random_orthonormal_basis(key, template: Pytree, k: int) -> Pytree:
+    """k orthonormal random vectors shaped like ``template`` (bootstrap W)."""
+    vs = []
+    for i in range(k):
+        key, sub = jax.random.split(key)
+        v = pt.tree_random_like(sub, template)
+        for u in vs:
+            v = pt.tree_axpy(-pt.tree_dot(u, v), u, v)
+        v = pt.tree_scale(1.0 / pt.tree_norm(v), v)
+        vs.append(v)
+    return pt.basis_from_vectors(vs)

@@ -1,0 +1,374 @@
+"""Iterative SPD solvers: CG, preconditioned CG, and deflated CG.
+
+This file implements the paper's Algorithm 1 (Saad et al.'s deflated
+conjugate gradient) as a jit-able, pytree-native, shardable solver:
+
+* vectors are arbitrary pytrees (``repro.core.pytree``);
+* ``A`` is any matrix-free operator (``repro.core.operators``);
+* the main iteration is a ``jax.lax.while_loop`` so the entire solve — and
+  therefore an entire Hessian-free optimizer step that embeds it — lowers
+  to a single XLA computation that pjit can shard across a pod;
+* the first ``ell`` search directions and their ``A``-products are recorded
+  into fixed-size ring buffers, which is all the harmonic-Ritz recycling
+  step (``repro.core.recycle``) needs — zero extra matvecs, exactly the
+  "readily available quantities" trick of the paper (§2.3, adapted: we
+  store ``P``/``AP`` directly and form ``F``/``G`` by two tall-skinny GEMMs,
+  which is MXU-friendly; see DESIGN.md §8).
+
+Deflation (the lines that differ from textbook CG, cf. paper Alg. 1
+lines 3 & 11):
+
+    x0  = x_{-1} + W (WᵀAW)⁻¹ Wᵀ r_{-1}          # Wᵀ r0 = 0
+    p0  = r0 − W μ0,        WᵀAW μ0 = WᵀA r0
+    p_j = β p_{j-1} + r_j − W μ_j,  WᵀAW μ_j = WᵀA r_j
+
+``WᵀA r`` is evaluated as ``(AW)ᵀ r`` (A symmetric), so the per-iteration
+deflation overhead is two tall-skinny GEMVs + one k×k triangular solve —
+O(nk) flops and *no* additional collectives beyond the two GEMV psums.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.linalg import cho_factor, cho_solve
+
+from repro.core import pytree as pt
+
+Pytree = Any
+
+
+class SolveInfo(NamedTuple):
+    """Diagnostics of an iterative solve (all traced values)."""
+
+    iterations: jax.Array  # int32: CG iterations executed
+    converged: jax.Array  # bool
+    residual_norm: jax.Array  # final ‖r‖
+    matvecs: jax.Array  # total operator applications
+    residual_norms: Optional[jax.Array] = None  # (maxiter+1,) trace or None
+    breakdown: jax.Array | bool = False  # pᵀAp lost positivity
+
+
+class RecycleData(NamedTuple):
+    """Stored Krylov quantities for harmonic-Ritz extraction."""
+
+    P: Pytree  # basis of ell search directions
+    AP: Pytree  # their A-products
+    stored: jax.Array  # int32: valid columns (may be < ell on early converge)
+
+
+class CGResult(NamedTuple):
+    x: Pytree
+    info: SolveInfo
+    recycle: Optional[RecycleData] = None
+
+
+def _tolerances(b, tol, atol):
+    bnorm = pt.tree_norm(b)
+    return jnp.maximum(tol * bnorm, atol), bnorm
+
+
+# ---------------------------------------------------------------------------
+# Conjugate gradients (the paper's CG baseline)
+# ---------------------------------------------------------------------------
+
+
+def cg(
+    A,
+    b: Pytree,
+    x0: Optional[Pytree] = None,
+    *,
+    tol: float = 1e-5,
+    atol: float = 0.0,
+    maxiter: int = 1000,
+    M: Optional[Callable[[Pytree], Pytree]] = None,
+    record_residuals: bool = False,
+) -> CGResult:
+    """(Preconditioned) conjugate gradients for SPD ``A``.
+
+    ``M`` is an (SPD) preconditioner apply ``r ↦ M⁻¹ r``; ``None`` gives
+    plain CG, matching the paper's baseline.
+    """
+    if x0 is None:
+        x0 = pt.tree_zeros_like(b)
+    precond = M if M is not None else (lambda v: v)
+
+    r0 = pt.tree_sub(b, A(x0))
+    z0 = precond(r0)
+    p0 = z0
+    rz0 = pt.tree_dot(r0, z0)
+    rnorm0 = pt.tree_norm(r0)
+    threshold, _ = _tolerances(b, tol, atol)
+
+    if record_residuals:
+        trace0 = jnp.full((maxiter + 1,), jnp.nan, dtype=rnorm0.dtype)
+        trace0 = trace0.at[0].set(rnorm0)
+    else:
+        trace0 = None
+
+    diverged_at = 1e8 * jnp.maximum(rnorm0, pt.tree_norm(b))
+
+    def cond(state):
+        j, _, _, _, _, rnorm, _, brk = state
+        return (j < maxiter) & (rnorm > threshold) & (~brk)
+
+    def body(state):
+        j, x, r, z, p, rnorm, trace, brk = state
+        ap = A(p)
+        d = pt.tree_dot(p, ap)
+        brk = (d <= 0.0) | (~jnp.isfinite(d)) | (rnorm > diverged_at)
+        rz = pt.tree_dot(r, z)
+        alpha = jnp.where(brk, 0.0, rz / jnp.where(brk, 1.0, d))
+        x = pt.tree_axpy(alpha, p, x)
+        r = pt.tree_axpy(-alpha, ap, r)
+        z = precond(r)
+        rz_new = pt.tree_dot(r, z)
+        beta = rz_new / jnp.where(rz == 0.0, 1.0, rz)
+        p = pt.tree_axpy(beta, p, z)
+        rnorm = pt.tree_norm(r)
+        if trace is not None:
+            trace = trace.at[j + 1].set(rnorm)
+        return (j + 1, x, r, z, p, rnorm, trace, brk)
+
+    state = (jnp.int32(0), x0, r0, z0, p0, rnorm0, trace0, jnp.bool_(False))
+    j, x, r, _, _, rnorm, trace, brk = jax.lax.while_loop(cond, body, state)
+    del r, rz0
+    info = SolveInfo(
+        iterations=j,
+        converged=rnorm <= threshold,
+        residual_norm=rnorm,
+        matvecs=j + 1,
+        residual_norms=trace,
+        breakdown=brk,
+    )
+    return CGResult(x=x, info=info)
+
+
+# ---------------------------------------------------------------------------
+# Deflated conjugate gradients — paper Algorithm 1
+# ---------------------------------------------------------------------------
+
+
+def deflated_initial_guess(x_prev, r_prev, W, AW, waw_cho):
+    """Line 3 of Alg. 1: ``x0 = x_{-1} + W (WᵀAW)⁻¹ Wᵀ r_{-1}``.
+
+    Returns ``(x0, r0)`` with ``r0`` updated via ``AW`` (no extra matvec):
+    ``r0 = r_{-1} − AW c``.
+    """
+    c = cho_solve(waw_cho, pt.basis_dot(W, r_prev))
+    x0 = pt.tree_add(x_prev, pt.basis_combine(W, c))
+    r0 = pt.tree_sub(r_prev, pt.basis_combine(AW, c))
+    return x0, r0
+
+
+def defcg(
+    A,
+    b: Pytree,
+    x0: Optional[Pytree] = None,
+    W: Optional[Pytree] = None,
+    AW: Optional[Pytree] = None,
+    *,
+    ell: int = 0,
+    tol: float = 1e-5,
+    atol: float = 0.0,
+    maxiter: int = 1000,
+    min_iters: int = 0,
+    record_residuals: bool = False,
+    waw_jitter: float = 0.0,
+    exact_aw: bool = True,
+) -> CGResult:
+    """Deflated CG — ``def-CG(k, ell)`` of the paper (k = basis size of W).
+
+    Args:
+      A: SPD operator (callable on pytrees).
+      b: right-hand side.
+      x0: previous solution / warm start (``x_{-1}`` in Alg. 1).
+      W: deflation basis (stacked pytree of k vectors) or None → plain CG
+         that *still records* the first ``ell`` directions, which is how the
+         first system of a sequence bootstraps recycling (paper Fig. 1).
+      AW: ``A @ W``; computed here (k matvecs) when not supplied.
+      ell: number of leading (p, Ap) pairs to record for Ritz extraction.
+      min_iters: force at least this many iterations (useful to guarantee
+         ``ell`` stored columns inside fully-jitted outer loops).
+      waw_jitter: relative diagonal jitter for the k×k Cholesky.
+      exact_aw: declare that ``AW`` is exactly ``A @ W``.  When False (a
+         *stale* basis recycled across a drifted operator — the paper's
+         cheap mode), the initial residual is recomputed with one true
+         matvec instead of the ``r0 = r − AW c`` shortcut, keeping CG's
+         convergence target exact while the deflation is approximate.
+
+    Returns ``CGResult`` whose ``recycle`` field feeds
+    :func:`repro.core.recycle.harmonic_ritz`.
+    """
+    if x0 is None:
+        x0 = pt.tree_zeros_like(b)
+
+    threshold, _ = _tolerances(b, tol, atol)
+    matvecs = jnp.int32(0)
+
+    deflating = W is not None
+    if deflating:
+        k = pt.basis_size(W)
+        if AW is None:
+            AW = pt.basis_map_vectors(A, W)
+            matvecs = matvecs + k
+        waw = pt.gram(W, AW)
+        waw = 0.5 * (waw + waw.T)
+        if waw_jitter:
+            waw = waw + waw_jitter * (jnp.trace(waw) / k) * jnp.eye(
+                k, dtype=waw.dtype
+            )
+        waw_cho = cho_factor(waw)
+
+        r_init = pt.tree_sub(b, A(x0))
+        matvecs = matvecs + 1
+        x0, r0 = deflated_initial_guess(x0, r_init, W, AW, waw_cho)
+        if not exact_aw:
+            r0 = pt.tree_sub(b, A(x0))
+            matvecs = matvecs + 1
+
+        mu0 = cho_solve(waw_cho, pt.basis_dot(AW, r0))
+        p0 = pt.tree_sub(r0, pt.basis_combine(W, mu0))
+    else:
+        r0 = pt.tree_sub(b, A(x0))
+        matvecs = matvecs + 1
+        p0 = r0
+
+    rnorm0 = pt.tree_norm(r0)
+    rs0 = pt.tree_dot(r0, r0)
+
+    if record_residuals:
+        trace0 = jnp.full((maxiter + 1,), jnp.nan, dtype=rnorm0.dtype)
+        trace0 = trace0.at[0].set(rnorm0)
+    else:
+        trace0 = None
+
+    if ell > 0:
+        p_buf0 = pt.basis_zeros(b, ell)
+        ap_buf0 = pt.basis_zeros(b, ell)
+    else:
+        p_buf0 = ap_buf0 = None
+
+    diverged_at = 1e8 * jnp.maximum(rnorm0, pt.tree_norm(b))
+
+    def cond(state):
+        j = state[0]
+        rnorm = state[5]
+        brk = state[8]
+        keep_going = (rnorm > threshold) | (j < min_iters)
+        return (j < maxiter) & keep_going & (~brk)
+
+    def body(state):
+        j, x, r, p, rs, rnorm, trace, bufs, brk = state
+        ap = A(p)
+        d = pt.tree_dot(p, ap)
+        brk = (d <= 0.0) | (~jnp.isfinite(d)) | (rnorm > diverged_at)
+        alpha = jnp.where(brk, 0.0, rs / jnp.where(brk, 1.0, d))
+
+        if bufs is not None:
+            p_buf, ap_buf = bufs
+            idx = jnp.minimum(j, ell - 1)
+            write = j < ell
+            p_sel = jax.tree_util.tree_map(
+                lambda new, old: jnp.where(write, new, old),
+                p,
+                pt.basis_vector(p_buf, idx),
+            )
+            ap_sel = jax.tree_util.tree_map(
+                lambda new, old: jnp.where(write, new, old),
+                ap,
+                pt.basis_vector(ap_buf, idx),
+            )
+            p_buf = pt.basis_set(p_buf, p_sel, idx)
+            ap_buf = pt.basis_set(ap_buf, ap_sel, idx)
+            bufs = (p_buf, ap_buf)
+
+        x = pt.tree_axpy(alpha, p, x)
+        r = pt.tree_axpy(-alpha, ap, r)
+        rs_new = pt.tree_dot(r, r)
+        beta = rs_new / jnp.where(rs == 0.0, 1.0, rs)
+
+        if deflating:
+            mu = cho_solve(waw_cho, pt.basis_dot(AW, r))
+            p = pt.tree_axpy(
+                beta, p, pt.tree_sub(r, pt.basis_combine(W, mu))
+            )
+        else:
+            p = pt.tree_axpy(beta, p, r)
+
+        rnorm = jnp.sqrt(rs_new)
+        if trace is not None:
+            trace = trace.at[j + 1].set(rnorm)
+        return (j + 1, x, r, p, rs_new, rnorm, trace, bufs, brk)
+
+    state = (
+        jnp.int32(0),
+        x0,
+        r0,
+        p0,
+        rs0,
+        rnorm0,
+        trace0,
+        (p_buf0, ap_buf0) if ell > 0 else None,
+        jnp.bool_(False),
+    )
+    j, x, _, _, _, rnorm, trace, bufs, brk = jax.lax.while_loop(
+        cond, body, state
+    )
+
+    info = SolveInfo(
+        iterations=j,
+        converged=rnorm <= threshold,
+        residual_norm=rnorm,
+        matvecs=matvecs + j,
+        residual_norms=trace,
+        breakdown=brk,
+    )
+    recycle = None
+    if ell > 0:
+        p_buf, ap_buf = bufs
+        recycle = RecycleData(P=p_buf, AP=ap_buf, stored=jnp.minimum(j, ell))
+    return CGResult(x=x, info=info, recycle=recycle)
+
+
+# ---------------------------------------------------------------------------
+# Dense baseline (paper Table 1's Cholesky column)
+# ---------------------------------------------------------------------------
+
+
+def cholesky_solve(mat: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Exact SPD solve via Cholesky — the paper's cubic-cost baseline."""
+    return cho_solve(cho_factor(mat), b)
+
+
+# ---------------------------------------------------------------------------
+# Jitted entry points
+# ---------------------------------------------------------------------------
+#
+# Solver arguments that select code paths are static; vectors/bases/operators
+# are traced.  Operators registered as pytree nodes keep their matvec
+# closures in aux_data — reusing the *same* closure object across calls (as
+# the Laplace loop and RecycleManager do) makes these hit the jit cache, so
+# a Newton sequence compiles each solver variant exactly once.
+
+cg_jit = jax.jit(
+    cg,
+    static_argnames=("tol", "atol", "maxiter", "M", "record_residuals"),
+)
+
+defcg_jit = jax.jit(
+    defcg,
+    static_argnames=(
+        "ell",
+        "tol",
+        "atol",
+        "maxiter",
+        "min_iters",
+        "record_residuals",
+        "waw_jitter",
+        "exact_aw",
+    ),
+)

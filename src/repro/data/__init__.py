@@ -1,0 +1,6 @@
+"""repro.data — data pipelines (synthetic, deterministic, shard-aware)."""
+
+from repro.data.digits import make_infinite_digits
+from repro.data.tokens import TokenPipeline, batch_sharding
+
+__all__ = ["make_infinite_digits", "TokenPipeline", "batch_sharding"]

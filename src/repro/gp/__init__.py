@@ -1,0 +1,22 @@
+"""repro.gp — GP-classification substrate (the paper's experiment)."""
+
+from repro.gp.inducing import InducingResult, subset_gpc
+from repro.gp.kernels import RBFKernel
+from repro.gp.laplace import (
+    LaplaceResult,
+    NewtonTrace,
+    laplace_gpc,
+    logistic_quantities,
+    predict_latent,
+)
+
+__all__ = [
+    "InducingResult",
+    "subset_gpc",
+    "RBFKernel",
+    "LaplaceResult",
+    "NewtonTrace",
+    "laplace_gpc",
+    "logistic_quantities",
+    "predict_latent",
+]

@@ -1,0 +1,11 @@
+"""repro.kernels — Pallas TPU kernels for the perf-critical compute layers.
+
+Contract per kernel: `<name>.py` holds the `pl.pallas_call` + BlockSpec
+tiling, `ref.py` the pure-jnp oracle, `ops.py` the public jit'd wrapper
+with impl dispatch (pallas | interpret | reference | chunked | auto).
+"""
+
+from repro.kernels import ops, ref
+from repro.kernels.ops import attention, rbf_matvec, ssd, ssd_decode_step
+
+__all__ = ["ops", "ref", "attention", "rbf_matvec", "ssd", "ssd_decode_step"]

@@ -1,0 +1,126 @@
+"""Pure-jnp oracles for every Pallas kernel (the `ref.py` contract).
+
+These are the *semantic definitions*: simple, obviously-correct,
+materialize-everything implementations that the kernels must match
+(``tests/test_kernels.py`` sweeps shapes/dtypes with assert_allclose).
+They are also what the CPU smoke tests run.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# RBF Gram matvec
+# ---------------------------------------------------------------------------
+
+
+def rbf_gram(x: jnp.ndarray, theta: float, lengthscale: float) -> jnp.ndarray:
+    """Materialized RBF kernel Gram matrix K(X, X) — O(n²) memory."""
+    d2 = (
+        jnp.sum(x * x, 1)[:, None]
+        + jnp.sum(x * x, 1)[None, :]
+        - 2.0 * (x @ x.T)
+    )
+    d2 = jnp.maximum(d2, 0.0)
+    return (theta**2) * jnp.exp(-0.5 * d2 / (lengthscale**2))
+
+
+def rbf_matvec(
+    x: jnp.ndarray, v: jnp.ndarray, theta: float, lengthscale: float
+) -> jnp.ndarray:
+    """``K(X,X) @ v`` by materializing K — oracle for the fused kernel."""
+    k = rbf_gram(x, theta, lengthscale)
+    return k @ v
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional causal) — oracle for flash_attention
+# ---------------------------------------------------------------------------
+
+
+def mha_attention(
+    q: jnp.ndarray,  # (b, h, sq, dh)
+    k: jnp.ndarray,  # (b, hkv, sk, dh)
+    v: jnp.ndarray,  # (b, hkv, sk, dh)
+    *,
+    causal: bool = False,
+    scale: float | None = None,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Reference softmax attention with grouped KV heads.
+
+    ``q_offset`` positions the query block at absolute position
+    ``q_offset + i`` for causal masking (decode: sq=1, q_offset=cache_len-1).
+    """
+    b, h, sq, dh = q.shape
+    hkv = k.shape[1]
+    group = h // hkv
+    scale = dh**-0.5 if scale is None else scale
+
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kk).astype(jnp.float32) * scale
+    if causal:
+        sk = k.shape[2]
+        qpos = q_offset + jnp.arange(sq)[:, None]
+        kpos = jnp.arange(sk)[None, :]
+        logits = jnp.where(kpos <= qpos, logits, -jnp.inf)
+    probs = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs.astype(v.dtype), vv)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD — oracle: the exact sequential state-space recurrence
+# ---------------------------------------------------------------------------
+
+
+def ssd_reference(
+    x: jnp.ndarray,  # (b, l, h, p)   inputs per head
+    dt: jnp.ndarray,  # (b, l, h)     softplus-ed step sizes (>0)
+    a: jnp.ndarray,  # (h,)           negative decay rates (a < 0)
+    bmat: jnp.ndarray,  # (b, l, g, n)  input projections ("B")
+    cmat: jnp.ndarray,  # (b, l, g, n)  output projections ("C")
+    d: jnp.ndarray | None = None,  # (h,) skip connection
+) -> jnp.ndarray:
+    """Sequential SSD recurrence (state-space duality, arXiv 2405.21060):
+
+        h_t = exp(a·dt_t) · h_{t-1} + dt_t · B_t x_tᵀ      (per head)
+        y_t = C_t h_t (+ D x_t)
+
+    with ``g`` B/C groups shared across ``h`` heads (h % g == 0).
+    O(l·n·p) time — slow but exact; the chunked kernel must match it.
+    """
+    b, l, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    heads_per_group = h // g
+
+    def step(state, inputs):
+        xt, dtt, bt, ct = inputs  # (b,h,p), (b,h), (b,g,n), (b,g,n)
+        decay = jnp.exp(a[None, :] * dtt)  # (b, h)
+        bth = jnp.repeat(bt, heads_per_group, axis=1)  # (b, h, n)
+        cth = jnp.repeat(ct, heads_per_group, axis=1)
+        upd = (dtt * xt.transpose(2, 0, 1)).transpose(1, 2, 0)  # dt*x (b,h,p)
+        new = state * decay[..., None, None] + jnp.einsum(
+            "bhp,bhn->bhpn", upd, bth
+        )
+        yt = jnp.einsum("bhpn,bhn->bhp", new, cth)
+        return new, yt
+
+    state0 = jnp.zeros((b, h, p, n), x.dtype)
+    xs = (
+        x.transpose(1, 0, 2, 3),
+        dt.transpose(1, 0, 2),
+        bmat.transpose(1, 0, 2, 3),
+        cmat.transpose(1, 0, 2, 3),
+    )
+    import jax
+
+    _, ys = jax.lax.scan(step, state0, xs)
+    y = ys.transpose(1, 0, 2, 3)  # (b, l, h, p)
+    if d is not None:
+        y = y + x * d[None, None, :, None]
+    return y

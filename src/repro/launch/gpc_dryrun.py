@@ -1,0 +1,142 @@
+"""GPC (paper-workload) dry-run cell: one def-CG iteration at n = 2²⁰.
+
+The paper's own system at pod scale: GP-classification Newton systems
+``A = I + H½KH½`` with n = 1M data points.  The fused Gram matvec is
+distributed by ``shard_map``: X rows live replicated (1M×784 f32 ≈ 3.3 GB,
+fits HBM), the CG vectors are row-sharded across *all* 256/512 chips
+(data × model axes flattened), and each chip computes its row-block of
+``K·v`` against the full X with the same blocking as the Pallas kernel.
+CG's inner products become single f32-scalar psums — the collective
+pattern of distributed CG is two scalar all-reduces + one 4 MB
+all-gather (of v) per iteration.
+
+Because the def-CG while-loop has a *dynamic* trip count (convergence),
+XLA cannot annotate ``known_trip_count`` — so we lower exactly ONE
+deflated-CG iteration (matvec + deflation GEMVs + AXPYs) and the roofline
+scales it by the measured iteration counts from the CPU benchmark
+(EXPERIMENTS.md §Paper-validation).  Invoked from dryrun.py via
+``--arch gpc-mnist``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.gpc_mnist import GPCConfig
+
+
+def row_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)  # rows sharded over every axis
+
+
+def make_defcg_iteration(cfg: GPCConfig, mesh: Mesh,
+                         replicate_x: bool = False):
+    """One def-CG(k) iteration: Ap, α, x/r updates, μ-solve, p update.
+
+    ``replicate_x``: §Perf iteration — X is loop-invariant, so gathering
+    it per matvec (baseline: 3.3 GB all-gather/iteration) is pure waste;
+    keeping X replicated (3.3 GB of HBM, fits v5e) removes the gather and
+    leaves a single 4 MB v-gather + two scalar psums per iteration.
+    """
+    rows = row_axes(mesh)
+    block = cfg.block
+    x_spec = P(None, None) if replicate_x else P(rows, None)
+
+    @functools.partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(x_spec, P(rows)),
+        out_specs=P(rows),
+    )
+    def gram_matvec_local(x_in, v_local):
+        # gather v (4 MB) once; row-block of exp-distances vs full X is
+        # recomputed in VMEM-sized chunks — fused-Gram blocking (kernels/).
+        v_full = jax.lax.all_gather(v_local, rows, tiled=True)
+        if replicate_x:
+            x_full = x_in
+            n_dev = mesh.devices.size
+            shard = x_in.shape[0] // n_dev
+            idx = jax.lax.axis_index(rows) * shard
+            x_local = jax.lax.dynamic_slice_in_dim(x_in, idx, shard, 0)
+        else:
+            x_full = jax.lax.all_gather(x_in, rows, tiled=True)
+            x_local = x_in
+        sq_l = jnp.sum(x_local * x_local, axis=1, keepdims=True)
+
+        nb = x_full.shape[0] // block
+
+        def body(acc, j):
+            xb = jax.lax.dynamic_slice_in_dim(x_full, j * block, block, 0)
+            vb = jax.lax.dynamic_slice_in_dim(v_full, j * block, block, 0)
+            sq_b = jnp.sum(xb * xb, axis=1)[None, :]
+            d2 = jnp.maximum(sq_l + sq_b - 2.0 * (x_local @ xb.T), 0.0)
+            return acc + jnp.exp(-0.5 * d2) @ vb, None
+
+        acc0 = v_local * 0.0  # varying-axes-correct zero under shard_map
+        acc, _ = jax.lax.scan(body, acc0, jnp.arange(nb))
+        return acc
+
+    def a_matvec(x_data, sqrt_h, v):
+        return v + sqrt_h * gram_matvec_local(x_data, sqrt_h * v)
+
+    def defcg_iteration(x_data, sqrt_h, state):
+        """state = (x, r, p, rs, W, AW, waw_inv) — one Alg.-1 iteration."""
+        xv, r, p, rs, W, AW, waw_inv = state
+        ap = a_matvec(x_data, sqrt_h, p)
+        d = jnp.vdot(p, ap)  # psum under the hood
+        alpha = rs / d
+        xv = xv + alpha * p
+        r = r - alpha * ap
+        rs_new = jnp.vdot(r, r)
+        beta = rs_new / rs
+        mu = waw_inv @ (AW @ r)  # (k,n)@(n,) — deflation GEMV + k×k solve
+        p = beta * p + r - W.T @ mu
+        return (xv, r, p, rs_new, W, AW, waw_inv)
+
+    return defcg_iteration
+
+
+def input_specs(cfg: GPCConfig, mesh: Mesh):
+    n, d, k = cfg.n, cfg.d, cfg.k
+    f32 = jnp.float32 if cfg.dtype == "float32" else jnp.float64
+    sds = jax.ShapeDtypeStruct
+    x_data = sds((n, d), f32)
+    sqrt_h = sds((n,), f32)
+    state = (
+        sds((n,), f32), sds((n,), f32), sds((n,), f32), sds((), f32),
+        sds((k, n), f32), sds((k, n), f32), sds((k, k), f32),
+    )
+    return x_data, sqrt_h, state
+
+
+def shardings(cfg: GPCConfig, mesh: Mesh, replicate_x: bool = False):
+    rows = row_axes(mesh)
+    rs = NamedSharding(mesh, P(rows))
+    xs = NamedSharding(mesh, P(None, None) if replicate_x else P(rows, None))
+    rep = NamedSharding(mesh, P())
+    basis = NamedSharding(mesh, P(None, rows))
+    state = (rs, rs, rs, rep, basis, basis, rep)
+    return xs, rs, state
+
+
+def lower_cell(cfg: GPCConfig, mesh: Mesh, replicate_x: bool = False):
+    it = make_defcg_iteration(cfg, mesh, replicate_x=replicate_x)
+    x_s, h_s, st_s = input_specs(cfg, mesh)
+    x_sh, h_sh, st_sh = shardings(cfg, mesh, replicate_x=replicate_x)
+    jitted = jax.jit(
+        it,
+        in_shardings=(x_sh, h_sh, st_sh),
+        out_shardings=st_sh,
+        donate_argnums=(2,),
+    )
+    return jitted.lower(x_s, h_s, st_s)
+
+
+def model_flops(cfg: GPCConfig) -> float:
+    """Useful flops of one def-CG iteration: the fused Gram matvec."""
+    return 2.0 * cfg.n * cfg.n * cfg.d + 6.0 * cfg.n * cfg.n

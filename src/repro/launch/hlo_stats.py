@@ -1,0 +1,285 @@
+"""Post-SPMD HLO inspection: while-corrected flops, traffic, collectives.
+
+``compiled.cost_analysis()`` counts every ``while`` body ONCE, regardless
+of trip count — for scan-over-layers models that undercounts flops and
+collective bytes by ~n_layers×.  XLA leaves the trip count in the HLO
+(``backend_config={"known_trip_count":{"n":"48"}}``), so we rebuild the
+numbers properly:
+
+  1. split the module into computations and build per-computation symbol
+     tables (every def line carries its result shape);
+  2. build call-graph multiplicities: ENTRY×1, while bodies × trip count,
+     fusion/call/cond sub-computations × caller multiplicity;
+  3. per computation, sum
+       · dot flops      = 2 · |result| · contracted-dim size (from the
+         lhs operand's shape + ``lhs_contracting_dims``),
+       · HBM traffic    — SSA-value model over *executable* computations
+         (entry + while bodies/conds; fusion bodies are register-internal):
+         every materialized result is written once and read ~once
+         (2 × result bytes), with in-place ops special-cased
+         (dynamic-update-slice ↦ 2 × update-operand bytes, so a KV-cache
+         append costs the token slice, not the cache),
+       · collective bytes by op kind;
+  4. total = Σ multiplicity × per-computation sums.
+
+Post-partition HLO shapes are per-device, so everything here is the
+per-chip view the roofline wants.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# ops with no real data movement of their own
+_NO_TRAFFIC = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "iota", "partition-id",
+}
+
+_SHAPE_ELEM_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_OPNAME_RE = re.compile(r"^(?:\(.*?\)|\w+\[[0-9,]*\]\S*)\s+([\w\-]+)[\.\d]*\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_CALLED_RE = re.compile(r"(?:body|calls|to_apply|branch_computations)=\{?%?([\w\.\-]+)")
+_OPERANDS_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_ELEM_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(text: str) -> List[int]:
+    m = _SHAPE_ELEM_RE.search(text)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+class Computation:
+    def __init__(self, name: str):
+        self.name = name
+        self.lines: List[str] = []
+        self.symtab: Dict[str, str] = {}  # instr name -> result shape text
+
+
+def _split_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    current = None
+    entry_re = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{")
+    for line in hlo.splitlines():
+        if current is None:
+            m = entry_re.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                name = m.group(2)
+                if m.group(1):
+                    name = "__entry__"
+                current = Computation(name)
+                comps[current.name] = current
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        current.lines.append(line)
+        dm = _DEF_RE.match(line)
+        if dm:
+            name, rest = dm.groups()
+            # result shape = leading "(...)" tuple or "dtype[dims]..." token
+            if rest.startswith("("):
+                depth = 0
+                for i, ch in enumerate(rest):
+                    depth += ch == "("
+                    depth -= ch == ")"
+                    if depth == 0:
+                        current.symtab[name] = rest[: i + 1]
+                        break
+            else:
+                tok = rest.split(" ", 1)[0]
+                current.symtab[name] = tok
+    return comps
+
+
+def _fixpoint_mult(edges, comps) -> Dict[str, float]:
+    mult = {name: 0.0 for name in comps}
+    mult["__entry__"] = 1.0
+    for _ in range(len(comps) + 2):
+        nxt = {name: 0.0 for name in comps}
+        nxt["__entry__"] = 1.0
+        for caller, outs in edges.items():
+            m = mult.get(caller, 0.0)
+            if not m:
+                continue
+            for callee, f in outs:
+                if callee in nxt:
+                    nxt[callee] += m * f
+        if nxt == mult:
+            break
+        mult = nxt
+    return mult
+
+
+def analyze(hlo: str) -> dict:
+    """Full while-corrected per-device analysis (see module docstring)."""
+    comps = _split_computations(hlo)
+    edges: Dict[str, List[Tuple[str, float]]] = defaultdict(list)
+    trips: Dict[str, float] = {}
+    for c in comps.values():
+        for line in c.lines:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            rest = dm.group(2)
+            om = _OPNAME_RE.match(rest)
+            op = om.group(1) if om else ""
+            if op == "while":
+                trip = 1.0
+                tm = _TRIP_RE.search(line)
+                if tm:
+                    trip = float(tm.group(1))
+                bm = re.search(r"body=%?([\w\.\-]+)", line)
+                cm = re.search(r"condition=%?([\w\.\-]+)", line)
+                if bm:
+                    edges[c.name].append((bm.group(1), trip))
+                    trips[bm.group(1)] = trip
+                if cm:
+                    edges[c.name].append((cm.group(1), trip))
+            else:
+                for callee in _CALLED_RE.findall(line):
+                    edges[c.name].append((callee, 1.0))
+    mult = _fixpoint_mult(edges, comps)
+
+    # Executable computations: entry + (transitively) while bodies/conds.
+    # Everything else reached via calls=/to_apply= is a fusion/reducer body
+    # whose intermediates never hit HBM.
+    executable = {"__entry__"}
+    frontier = ["__entry__"]
+    while_edges: Dict[str, List[str]] = defaultdict(list)
+    for c in comps.values():
+        for line in c.lines:
+            if " while(" in line:
+                for pat in (r"body=%?([\w\.\-]+)", r"condition=%?([\w\.\-]+)"):
+                    m2 = re.search(pat, line)
+                    if m2:
+                        while_edges[c.name].append(m2.group(1))
+    while frontier:
+        name = frontier.pop()
+        for callee in while_edges.get(name, []):
+            if callee not in executable:
+                executable.add(callee)
+                frontier.append(callee)
+
+    flops = 0.0
+    traffic = 0.0
+    coll: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0.0, "bytes": 0.0}
+    )
+    coll_items: List[dict] = []
+    for c in comps.values():
+        m = mult.get(c.name, 0.0)
+        if not m:
+            continue
+        for line in c.lines:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            iname, rest = dm.groups()
+            om = _OPNAME_RE.match(rest)
+            op = om.group(1) if om else ""
+            rshape = c.symtab.get(iname, "")
+
+            if op == "dot":
+                lhs_m = re.search(r"\(%([\w\.\-]+)", rest)
+                cd_m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rest)
+                contract = 1
+                if lhs_m and cd_m:
+                    lhs_shape = c.symtab.get(lhs_m.group(1), "")
+                    dims = _shape_dims(lhs_shape)
+                    for idx in cd_m.group(1).split(","):
+                        if idx and int(idx) < len(dims):
+                            contract *= dims[int(idx)]
+                relems = 1
+                for d in _shape_dims(rshape):
+                    relems *= d
+                flops += m * 2.0 * relems * contract
+
+            op_base = op
+            if op_base.endswith("-start"):
+                op_base = op_base[: -len("-start")]
+            if op_base in COLLECTIVE_OPS and not op.endswith("-done"):
+                b = _shape_bytes(rshape)
+                coll[op_base]["count"] += m
+                coll[op_base]["bytes"] += m * b
+                coll_items.append(
+                    {
+                        "op": op_base, "shape": rshape[:90], "mult": m,
+                        "bytes": m * b, "comp": c.name[:40],
+                        "meta": (
+                            re.search(r'op_name="([^"]*)"', rest).group(1)[:110]
+                            if 'op_name="' in rest else ""
+                        ),
+                    }
+                )
+
+            if (
+                c.name in executable
+                and op not in _NO_TRAFFIC
+                and op != ""
+            ):
+                if op == "dynamic-update-slice":
+                    # in-place: traffic = the update slice, not the buffer
+                    arg_m = re.search(r"\(([^)]*)\)", rest)
+                    refs = (
+                        _OPERANDS_RE.findall(arg_m.group(1)) if arg_m else []
+                    )
+                    upd = (
+                        _shape_bytes(c.symtab.get(refs[1], ""))
+                        if len(refs) > 1 else 0
+                    )
+                    traffic += m * 2.0 * upd
+                else:
+                    traffic += m * 2.0 * _shape_bytes(rshape)
+
+    coll_items.sort(key=lambda x: -x["bytes"])
+    return {
+        "flops": flops,
+        "traffic_bytes": traffic,
+        "collectives": {k: dict(v) for k, v in coll.items()},
+        "top_collectives": coll_items[:12],
+        "while_trips": trips,
+        "n_computations": len(comps),
+    }
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """While-corrected collective census (back-compat wrapper)."""
+    return analyze(hlo_text)["collectives"]
+
+
+def op_census(hlo_text: str, ops=("fusion", "custom-call", "while", "sort")):
+    out = {}
+    for op in ops:
+        out[op] = len(re.findall(rf"=\s*[^=]*\b{op}[.\d]*\(", hlo_text))
+    return out

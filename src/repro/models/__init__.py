@@ -1,0 +1,23 @@
+"""repro.models — the architecture zoo (pure-JAX, scan-over-periods)."""
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import (
+    DecodeState,
+    decode_step,
+    forward_hidden,
+    init,
+    init_decode_state,
+    lm_loss,
+    prefill,
+)
+
+__all__ = [
+    "ModelConfig",
+    "DecodeState",
+    "decode_step",
+    "forward_hidden",
+    "init",
+    "init_decode_state",
+    "lm_loss",
+    "prefill",
+]

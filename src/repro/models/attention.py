@@ -1,0 +1,226 @@
+"""GQA attention layer: projections, RoPE, qk-norm, KV cache, TP padding.
+
+Tensor-parallel head padding: on a fixed 16-way ``model`` axis, query
+heads are padded up to a multiple of the TP degree (arctic 56→64,
+starcoder2 24→32, stablelm 40→48 — the standard fixed-mesh deployment
+trade; the padded heads have zero output rows so they are functionally
+inert).  KV heads are *replicated* across TP when ``n_kv_heads < tp``
+(Megatron rule) — their projections stay unsharded and every device reads
+the full (small) KV cache.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, rms_head_norm, rope_apply, round_up
+from repro.models.sharding import shard
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray  # (B, Hkv, S, dh)
+    v: jnp.ndarray
+    length: jnp.ndarray  # int32 scalar — valid prefix
+
+
+def padded_q_heads(cfg: ModelConfig, tp: int) -> int:
+    return round_up(cfg.n_heads, max(tp, 1))
+
+
+def kv_sharded(cfg: ModelConfig, tp: int) -> bool:
+    return tp > 1 and cfg.n_kv_heads % tp == 0
+
+
+def attn_init(key, cfg: ModelConfig, tp: int = 1):
+    pd = jnp.dtype(cfg.param_dtype)
+    dh = cfg.head_dim
+    hq = padded_q_heads(cfg, tp)
+    hkv = cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    kv_sfx = "_cs" if kv_sharded(cfg, tp) else ""
+    p = {
+        "wq_cs": dense_init(ks[0], cfg.d_model, hq * dh, pd),
+        f"wk{kv_sfx}": dense_init(ks[1], cfg.d_model, hkv * dh, pd),
+        f"wv{kv_sfx}": dense_init(ks[2], cfg.d_model, hkv * dh, pd),
+        "wo_rs": dense_init(ks[3], hq * dh, cfg.d_model, pd),
+    }
+    if cfg.qkv_bias:
+        p["bq_hs"] = jnp.zeros((hq * dh,), pd)
+        p[f"bk{kv_sfx and '_hs'}"] = jnp.zeros((hkv * dh,), pd)
+        p[f"bv{kv_sfx and '_hs'}"] = jnp.zeros((hkv * dh,), pd)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), pd)
+        p["k_norm"] = jnp.ones((dh,), pd)
+    return p
+
+
+def _project_q(params, x, cfg: ModelConfig, positions):
+    dt = x.dtype
+    b, s, _ = x.shape
+    dh = cfg.head_dim
+    hq = params["wq_cs"].shape[1] // dh
+    q = x @ params["wq_cs"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + params["bq_hs"].astype(dt)
+    q = q.reshape(b, s, hq, dh)
+    if cfg.qk_norm:
+        q = rms_head_norm(params["q_norm"], q, cfg.norm_eps)
+    if cfg.rope:
+        q = rope_apply(q, positions, cfg.rope_theta, cfg.rope_pct)
+    return q
+
+
+def _project_kv(params, x, cfg: ModelConfig, positions):
+    dt = x.dtype
+    b, s, _ = x.shape
+    dh = cfg.head_dim
+    wk = params.get("wk_cs", params.get("wk"))
+    wv = params.get("wv_cs", params.get("wv"))
+    hkv = wk.shape[1] // dh
+    k = x @ wk.astype(dt)
+    v = x @ wv.astype(dt)
+    if cfg.qkv_bias:
+        k = k + params.get("bk_hs", params.get("bk")).astype(dt)
+        v = v + params.get("bv_hs", params.get("bv")).astype(dt)
+    k = k.reshape(b, s, hkv, dh)
+    v = v.reshape(b, s, hkv, dh)
+    if cfg.qk_norm:
+        k = rms_head_norm(params["k_norm"], k, cfg.norm_eps)
+    if cfg.rope:
+        k = rope_apply(k, positions, cfg.rope_theta, cfg.rope_pct)
+    return k, v
+
+
+def attn_apply(
+    params,
+    x: jnp.ndarray,  # (B, S, D)
+    cfg: ModelConfig,
+    *,
+    positions: Optional[jnp.ndarray] = None,
+    causal: bool = True,
+    cache: Optional[KVCache] = None,
+    memory: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+) -> Tuple[jnp.ndarray, Optional[KVCache]]:
+    """Self- or cross-attention with optional KV cache.
+
+    * prefill/train: ``cache=None`` → attends within ``x`` (causal opt.);
+    * decode: ``cache`` holds (B, Hkv, S_max, dh); ``x`` is the new token(s)
+      written at ``cache.length``;
+    * cross-attention: ``memory=(k, v)`` precomputed from the encoder.
+    """
+    b, s, _ = x.shape
+    dt = x.dtype
+    if positions is None:
+        base = cache.length if cache is not None else 0
+        positions = base + jnp.arange(s)[None, :]
+
+    q = _project_q(params, x, cfg, positions)
+    q_bhsd = q.transpose(0, 2, 1, 3)
+    q_bhsd = shard(q_bhsd, "batch", "model", None, None)
+
+    new_cache = None
+    if memory is not None:
+        k_full, v_full = memory  # (B, Hkv, S_mem, dh)
+        ctx = kops.attention(
+            q_bhsd, k_full, v_full,
+            causal=False, impl=cfg.attn_impl,
+            block_q=cfg.attn_block_q, block_k=cfg.attn_block_k,
+        )
+    elif cache is not None:
+        k, v = _project_kv(params, x, cfg, positions)
+        k_new = k.transpose(0, 2, 1, 3)
+        v_new = v.transpose(0, 2, 1, 3)
+        zero = jnp.int32(0)
+        kc = jax.lax.dynamic_update_slice(
+            cache.k, k_new.astype(cache.k.dtype),
+            (zero, zero, cache.length, zero),
+        )
+        vc = jax.lax.dynamic_update_slice(
+            cache.v, v_new.astype(cache.v.dtype),
+            (zero, zero, cache.length, zero),
+        )
+        new_cache = KVCache(k=kc, v=vc, length=cache.length + s)
+        if s > 1:
+            # Prefill: flash/chunked attention within the prompt (fresh
+            # caches start at length 0, so causal-within-x is exact).
+            # Perf iteration #1: the naive path ran the decode read with
+            # s_new = 32k, materializing (B, H, 32k, 32k) scores.
+            ctx = kops.attention(
+                q_bhsd,
+                k_new.astype(q_bhsd.dtype),
+                v_new.astype(q_bhsd.dtype),
+                causal=True, impl=cfg.attn_impl,
+                block_q=cfg.attn_block_q, block_k=cfg.attn_block_k,
+            )
+        else:
+            # Decode: masked read of the valid cache prefix.
+            ctx = _decode_attention(q_bhsd, kc, vc, cache.length, s, cfg)
+    else:
+        k, v = _project_kv(params, x, cfg, positions)
+        k_bhsd = shard(k.transpose(0, 2, 1, 3), "batch", None, None, None)
+        v_bhsd = shard(v.transpose(0, 2, 1, 3), "batch", None, None, None)
+        ctx = kops.attention(
+            q_bhsd, k_bhsd, v_bhsd,
+            causal=causal, impl=cfg.attn_impl,
+            block_q=cfg.attn_block_q, block_k=cfg.attn_block_k,
+        )
+
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, -1)
+    out = ctx @ params["wo_rs"].astype(dt)
+    return out, new_cache
+
+
+def _decode_attention(q, kc, vc, length, s_new, cfg: ModelConfig):
+    """Masked attention of `s_new` fresh queries against a cache prefix.
+
+    Memory-light reference path (scores are (B,H,s_new,S_max), fine for
+    decode where s_new is 1) with explicit length masking; large caches
+    (512k) stream through the chunked impl when configured.
+    """
+    b, h, _, dh = q.shape
+    hkv = kc.shape[1]
+    group = h // hkv
+    s_max = kc.shape[2]
+    scale = dh**-0.5
+
+    # Grouped einsum — never materializes the repeated KV (512k caches).
+    qg = q.reshape(b, hkv, group, s_new, dh)
+    logits = (
+        jnp.einsum("bhgqd,bhkd->bhgqk", qg, kc).astype(jnp.float32) * scale
+    )
+    kpos = jnp.arange(s_max)[None, None, None, None, :]
+    qpos = (length + jnp.arange(s_new))[None, None, None, :, None]
+    logits = jnp.where(kpos <= qpos, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    ctx = jnp.einsum("bhgqk,bhkd->bhgqd", probs, vc)
+    return ctx.reshape(b, h, s_new, dh)
+
+
+def init_cache(
+    cfg: ModelConfig, batch: int, max_len: int, tp: int = 1, dtype=None
+) -> KVCache:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    shape = (batch, cfg.n_kv_heads, max_len, cfg.head_dim)
+    return KVCache(
+        k=jnp.zeros(shape, dtype),
+        v=jnp.zeros(shape, dtype),
+        length=jnp.int32(0),
+    )
+
+
+def encode_memory(params, enc_out, cfg: ModelConfig):
+    """Precompute cross-attention K/V from encoder output (B, S, D)."""
+    dt = enc_out.dtype
+    b, s, _ = enc_out.shape
+    dh = cfg.head_dim
+    wk = params.get("wk_cs", params.get("wk"))
+    wv = params.get("wv_cs", params.get("wv"))
+    hkv = wk.shape[1] // dh
+    k = (enc_out @ wk.astype(dt)).reshape(b, s, hkv, dh)
+    v = (enc_out @ wv.astype(dt)).reshape(b, s, hkv, dh)
+    return k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)

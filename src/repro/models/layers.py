@@ -1,0 +1,180 @@
+"""Shared building blocks: norms, RoPE, MLPs, embeddings.
+
+All modules follow the same convention: ``<name>_init(key, cfg, ...) ->
+params`` (a dict whose leaf names carry sharding suffixes, see
+models/sharding.py) and ``<name>_apply(params, x, ...) -> y`` (pure,
+jit/scan/vmap-friendly).  Compute happens in ``cfg.dtype`` (bf16 by
+default) with f32 accumulation where it matters; params are stored in
+``cfg.param_dtype``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.sharding import shard
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    scale = (1.0 / d_in) ** 0.5 if scale is None else scale
+    return jax.random.normal(key, (d_in, d_out), dtype) * jnp.asarray(
+        scale, dtype
+    )
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_init(cfg: ModelConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), _pdtype(cfg))}
+    if cfg.norm_type == "layer":
+        p["bias"] = jnp.zeros((d,), _pdtype(cfg))
+    return p
+
+
+def norm_apply(params, x, cfg: ModelConfig):
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layer":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        out = out * params["scale"].astype(jnp.float32) + params[
+            "bias"
+        ].astype(jnp.float32)
+    else:  # rms
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + cfg.norm_eps)
+        out = out * params["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rms_head_norm(scale, x, eps):
+    """RMS norm over the trailing (head) dim — qk_norm (qwen3/chameleon)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(
+        x.dtype
+    )
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_apply(x: jnp.ndarray, positions: jnp.ndarray, theta: float, pct: float):
+    """Rotary embedding on (..., seq, n_heads, head_dim); partial if pct<1."""
+    dh = x.shape[-1]
+    rot = int(dh * pct) // 2 * 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = xr[..., :half], xr[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+    return jnp.concatenate([out, xp], axis=-1) if rot < dh else out
+
+
+def sinusoidal_positions(seq: int, d: int, dtype) -> jnp.ndarray:
+    """Absolute sinusoidal position table (seamless encoder)."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    half = d // 2
+    freqs = 10000.0 ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d_ff = d_ff or cfg.d_ff
+    pd = _pdtype(cfg)
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_type == "swiglu":
+        return {
+            "gate_cs": dense_init(ks[0], cfg.d_model, d_ff, pd),
+            "up_cs": dense_init(ks[1], cfg.d_model, d_ff, pd),
+            "down_rs": dense_init(ks[2], d_ff, cfg.d_model, pd),
+        }
+    return {
+        "up_cs": dense_init(ks[0], cfg.d_model, d_ff, pd),
+        "up_bias_hs": jnp.zeros((d_ff,), pd),
+        "down_rs": dense_init(ks[1], d_ff, cfg.d_model, pd),
+        "down_bias": jnp.zeros((cfg.d_model,), pd),
+    }
+
+
+def mlp_apply(params, x, cfg: ModelConfig):
+    dt = _dtype(cfg)
+    if cfg.mlp_type == "swiglu":
+        g = x @ params["gate_cs"].astype(dt)
+        u = x @ params["up_cs"].astype(dt)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(dt) * u
+        h = shard(h, "batch", None, "model")
+        return h @ params["down_rs"].astype(dt)
+    h = x @ params["up_cs"].astype(dt) + params["up_bias_hs"].astype(dt)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(dt)
+    h = shard(h, "batch", None, "model")
+    return h @ params["down_rs"].astype(dt) + params["down_bias"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    """Vocab rounded to 256 for clean 16-way sharding (Megatron-style)."""
+    return round_up(cfg.vocab_size, 256)
+
+
+def embed_init(key, cfg: ModelConfig):
+    pd = _pdtype(cfg)
+    v = padded_vocab(cfg)
+    p = {"table_vs": jax.random.normal(key, (v, cfg.d_model), pd) * 0.02}
+    if not cfg.tie_embeddings:
+        p["lm_head_cs"] = dense_init(
+            jax.random.fold_in(key, 1), cfg.d_model, v, pd
+        )
+    return p
+
+
+def embed_apply(params, tokens, cfg: ModelConfig):
+    table = params["table_vs"].astype(_dtype(cfg))
+    out = jnp.take(table, tokens, axis=0)
+    return shard(out, "batch", None, None)
+
+
+def lm_head_weights(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["table_vs"].T.astype(_dtype(cfg))
+    return params["lm_head_cs"].astype(_dtype(cfg))

@@ -1,0 +1,196 @@
+"""Mamba2 (SSD) mixer block: in-proj → causal conv → SSD → gated norm → out.
+
+Follows the Mamba2 block layout (arXiv 2405.21060): a single input
+projection produces [z (gate), x (heads·headdim), B, C (groups·state),
+dt (heads)]; x/B/C pass through a short causal depthwise conv; the SSD
+scan (Pallas kernel on TPU, chunked-jnp elsewhere — repro/kernels) runs
+the state-space mixing; output is RMS-gated by silu(z) and projected back.
+
+Head sharding: the ``d_inner`` feature dim (heads·headdim) is
+column-sharded over the ``model`` axis; B/C groups are small (g=1 for the
+assigned configs) and stay replicated — the TPU-native layout for SSD
+(heads are embarrassingly parallel; only the out-proj row-reduces).
+
+Decode state = (conv tail (K−1 inputs), SSD state (h, p, n)) — the SSM
+analogue of a KV cache, O(1) in sequence length.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+from repro.models.sharding import shard
+
+
+class SSMState(NamedTuple):
+    conv: jnp.ndarray  # (B, K-1, conv_dim) rolling input tail
+    ssd: jnp.ndarray  # (B, H, P, N)
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.d_inner
+    h = cfg.n_ssm_heads
+    p = cfg.ssm_head_dim
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    conv_dim = di + 2 * g * n
+    return di, h, p, g, n, conv_dim
+
+
+def mamba_init(key, cfg: ModelConfig):
+    pd = jnp.dtype(cfg.param_dtype)
+    di, h, p, g, n, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 5)
+    d_in_proj = 2 * di + 2 * g * n + h
+    return {
+        "in_proj_cs": dense_init(ks[0], cfg.d_model, d_in_proj, pd),
+        "conv_w_rs": jax.random.normal(ks[1], (conv_dim, cfg.ssm_conv), pd)
+        * jnp.asarray(cfg.ssm_conv**-0.5, pd),
+        "conv_b_hs": jnp.zeros((conv_dim,), pd),
+        "a_log_hs": jnp.log(
+            jax.random.uniform(ks[2], (h,), pd, minval=1.0, maxval=16.0)
+        ),
+        "dt_bias_hs": jnp.log(
+            jnp.expm1(
+                jax.random.uniform(ks[3], (h,), pd, minval=1e-3, maxval=0.1)
+            )
+        ),
+        "d_skip_hs": jnp.ones((h,), pd),
+        "gate_norm_hs": jnp.ones((di,), pd),
+        "out_proj_rs": dense_init(ks[4], di, cfg.d_model, pd),
+    }
+
+
+def _split_proj(zxbcdt, cfg: ModelConfig):
+    di, h, p, g, n, _ = _dims(cfg)
+    z, xin, bmat, cmat, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + g * n, 2 * di + 2 * g * n], axis=-1
+    )
+    return z, xin, bmat, cmat, dt
+
+
+def _causal_conv(seq, w, b):
+    """Depthwise causal conv over (B, S, C) with kernel (C, K)."""
+    k = w.shape[-1]
+    pad = jnp.pad(seq, ((0, 0), (k - 1, 0), (0, 0)))
+    stacked = jnp.stack(
+        [pad[:, i : i + seq.shape[1], :] for i in range(k)], axis=-1
+    )  # (B, S, C, K)
+    return jnp.einsum("bsck,ck->bsc", stacked, w.astype(seq.dtype)) + b.astype(
+        seq.dtype
+    )
+
+
+def mamba_apply(
+    params,
+    xres: jnp.ndarray,  # (B, S, D)
+    cfg: ModelConfig,
+    *,
+    state: Optional[SSMState] = None,
+) -> Tuple[jnp.ndarray, Optional[SSMState]]:
+    """Full-sequence scan (state=None) or stateful stepping (decode).
+
+    Decode calls with S small (typically 1) update the conv tail and SSD
+    state and return them.
+    """
+    dt_ = xres.dtype
+    b, s, _ = xres.shape
+    di, h, p, g, n, conv_dim = _dims(cfg)
+
+    zxbcdt = xres @ params["in_proj_cs"].astype(dt_)
+    z, xin, bmat, cmat, dtraw = _split_proj(zxbcdt, cfg)
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)  # (B,S,conv_dim)
+
+    new_state = None
+    if state is None:
+        conv_out = _causal_conv(
+            conv_in, params["conv_w_rs"], params["conv_b_hs"]
+        )
+    else:
+        ktail = cfg.ssm_conv - 1
+        hist = jnp.concatenate([state.conv, conv_in], axis=1)
+        conv_out = _causal_conv(
+            hist, params["conv_w_rs"], params["conv_b_hs"]
+        )[:, ktail:]
+        new_conv = jax.lax.dynamic_slice_in_dim(
+            hist, hist.shape[1] - ktail, ktail, axis=1
+        )
+
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(dt_)
+    xc, bc, cc = jnp.split(conv_out, [di, di + g * n], axis=-1)
+
+    xh = xc.reshape(b, s, h, p)
+    xh = shard(xh, "batch", None, "model", None)
+    bh = bc.reshape(b, s, g, n)
+    ch = cc.reshape(b, s, g, n)
+    dt_act = jax.nn.softplus(
+        dtraw.astype(jnp.float32) + params["dt_bias_hs"].astype(jnp.float32)
+    )
+    a = -jnp.exp(params["a_log_hs"].astype(jnp.float32))
+    d_skip = params["d_skip_hs"].astype(jnp.float32)
+
+    impl = (
+        cfg.attn_impl
+        if cfg.attn_impl in ("pallas", "interpret")
+        else "chunked"
+    )
+    if state is None:
+        y = kops.ssd(
+            xh, dt_act.astype(jnp.float32), a, bh, ch, d_skip,
+            impl=impl, chunk=cfg.ssm_chunk,
+        )
+    elif s > 1:
+        # Prefill: chunked scan seeded with the carried state; hand the
+        # final state to decode.  (Perf iteration #1: the naive path ran
+        # the O(1)-decode step S times — 32k sequential state r/w's.)
+        y, ssd_state = kops.ssd(
+            xh, dt_act.astype(jnp.float32), a, bh, ch, d_skip,
+            impl="chunked", chunk=cfg.ssm_chunk,
+            initial_state=state.ssd, return_state=True,
+        )
+        new_state = SSMState(conv=new_conv, ssd=ssd_state)
+    else:
+        def step1(carry, inp):
+            xt, dtt, bt, ct = inp
+            new, yt = kops.ssd_decode_step(carry, xt, dtt, a, bt, ct, d_skip)
+            return new, yt
+
+        ssd_state, ys = jax.lax.scan(
+            step1,
+            state.ssd,
+            (
+                xh.transpose(1, 0, 2, 3).astype(jnp.float32),
+                dt_act.transpose(1, 0, 2),
+                bh.transpose(1, 0, 2, 3).astype(jnp.float32),
+                ch.transpose(1, 0, 2, 3).astype(jnp.float32),
+            ),
+        )
+        y = ys.transpose(1, 0, 2, 3)
+        new_state = SSMState(conv=new_conv, ssd=ssd_state)
+
+    y = y.reshape(b, s, di).astype(dt_)
+
+    # Gated RMS norm (Mamba2's norm-before-out-proj).
+    zf = jax.nn.silu(z.astype(jnp.float32))
+    yf = y.astype(jnp.float32) * zf
+    ms = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    y = (
+        yf * jax.lax.rsqrt(ms + cfg.norm_eps) * params["gate_norm_hs"].astype(jnp.float32)
+    ).astype(dt_)
+
+    out = y @ params["out_proj_rs"].astype(dt_)
+    return out, new_state
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=None) -> SSMState:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    di, h, p, g, n, conv_dim = _dims(cfg)
+    return SSMState(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        ssd=jnp.zeros((batch, h, p, n), jnp.float32),
+    )

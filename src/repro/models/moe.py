@@ -1,0 +1,235 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-based dispatch.
+
+Design (token-dropping, sort-based dispatch — the cost-realistic layout):
+
+  1. router logits → softmax → top-k (gates, expert ids) per token;
+  2. assignments sorted by expert (stable ⇒ token-major priority), each
+     assignment gets a position-in-expert; positions ≥ capacity are dropped
+     (capacity C = ceil(T·k/E · capacity_factor));
+  3. gather the kept tokens into an (E, C, d) buffer, run all experts as
+     one batched einsum pair (MXU-friendly, expert dim shardable), and
+     scatter-add the gate-weighted outputs back.
+
+Expert parallelism: expert-stacked weights carry the ``_es`` suffix →
+``P("model", None, None)``.  Under pjit the gather/scatter lower to
+collectives chosen by SPMD (baseline); an explicit shard_map all-to-all
+dispatch is a hillclimb option (EXPERIMENTS.md §Perf).
+
+The auxiliary load-balancing loss (Shazeer-style fraction·probability
+product) is returned alongside so training can regularize routing.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+from repro.models.sharding import shard
+
+
+def moe_init(key, cfg: ModelConfig):
+    pd = jnp.dtype(cfg.param_dtype)
+    e = cfg.n_experts
+    d_ff = cfg.moe_d_ff or cfg.d_ff
+    ks = jax.random.split(key, 4)
+
+    def expert_stack(k, d_in, d_out):
+        return (
+            jax.random.normal(k, (e, d_in, d_out), pd)
+            * jnp.asarray((1.0 / d_in) ** 0.5, pd)
+        )
+
+    p = {"router": dense_init(ks[0], cfg.d_model, e, pd)}
+    if cfg.mlp_type == "swiglu":
+        p["gate_es"] = expert_stack(ks[1], cfg.d_model, d_ff)
+        p["up_es"] = expert_stack(ks[2], cfg.d_model, d_ff)
+        p["down_es"] = expert_stack(ks[3], d_ff, cfg.d_model)
+    else:
+        p["up_es"] = expert_stack(ks[1], cfg.d_model, d_ff)
+        p["down_es"] = expert_stack(ks[2], d_ff, cfg.d_model)
+    return p
+
+
+def capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = int(
+        n_tokens * cfg.experts_per_token / cfg.n_experts * cfg.capacity_factor
+    )
+    return max(c, cfg.experts_per_token)
+
+
+def moe_apply(
+    params, x: jnp.ndarray, cfg: ModelConfig
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Apply the MoE FFN to (B, S, D); returns (output, aux_loss).
+
+    Dispatches with the configured strategy: ``grouped`` (default — each
+    batch row is its own dispatch group, GShard/Switch-style, so token
+    gathers never cross the data axis; §Perf arctic hillclimb) or
+    ``global`` (single global capacity pool — simpler, but XLA must
+    resolve token gathers across the DP axes with pod-scale collectives).
+    """
+    if cfg.moe_dispatch == "grouped":
+        return moe_apply_grouped(params, x, cfg)
+    return moe_apply_global(params, x, cfg)
+
+
+def moe_apply_grouped(
+    params, x: jnp.ndarray, cfg: ModelConfig
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Group-local dispatch: capacity per (batch row, expert).
+
+    All indexing stays within each batch row, so under a batch-sharded
+    layout every gather/scatter is data-axis-local; the only cross-device
+    MoE collective left is the inherent expert-combine psum over the
+    ``model`` axis.
+    """
+    b, s, d = x.shape
+    k = cfg.experts_per_token
+    e = cfg.n_experts
+    cap = max(
+        int(s * k / e * cfg.capacity_factor), k
+    )
+    dt = x.dtype
+
+    logits = (x @ params["router"].astype(dt)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (B, S, E)
+    gates, eidx = jax.lax.top_k(probs, k)  # (B, S, k)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+
+    a_n = s * k  # assignments per row
+    flat_e = eidx.reshape(b, a_n).astype(jnp.int32)
+    flat_g = gates.reshape(b, a_n).astype(dt)
+    # token-major order: token t's k assignments are at [t·k, t·k+k)
+    flat_tok = jnp.repeat(jnp.arange(s, dtype=jnp.int32), k)[None, :].repeat(
+        b, axis=0
+    )
+
+    # Gather-only dispatch: sort assignments by expert within each row;
+    # scatters with constructed index arrays defeat SPMD (they replicate
+    # the operand — measured in §Perf), batched sorts + take_along_axis
+    # stay sharded.
+    order = jnp.argsort(flat_e, axis=1, stable=True)
+    rank = jnp.argsort(order, axis=1)  # inverse permutation
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    sorted_tok = jnp.take_along_axis(flat_tok, order, axis=1)
+
+    oh = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)  # (B, A, E)
+    counts = jnp.sum(oh, axis=1)  # (B, E)
+    starts = jnp.cumsum(counts, axis=1) - counts
+
+    frac = counts.astype(jnp.float32) / a_n
+    aux = e * jnp.mean(jnp.sum(frac * jnp.mean(probs, axis=1), axis=-1))
+
+    # expert buffers: slot c of expert e_i reads sorted stream position
+    # starts[e_i] + c (rows beyond counts are masked)
+    slot_iota = jnp.arange(cap, dtype=jnp.int32)
+    gidx = starts[..., None] + slot_iota[None, None, :]  # (B, E, C)
+    valid = slot_iota[None, None, :] < jnp.minimum(counts[..., None], cap)
+    gclip = jnp.clip(gidx, 0, a_n - 1).reshape(b, e * cap)
+    tok_buf = jnp.where(
+        valid,
+        jnp.take_along_axis(sorted_tok, gclip, axis=1).reshape(b, e, cap),
+        0,
+    )
+
+    xg = jnp.take_along_axis(
+        x[:, None, :, :], tok_buf[..., None], axis=2
+    )  # (B, E, C, d) — row-local gather
+    xg = jnp.where(valid[..., None], xg, 0)
+    xg = shard(xg, "batch", "model", None, None)
+
+    if cfg.mlp_type == "swiglu":
+        g = jnp.einsum("becd,edf->becf", xg, params["gate_es"].astype(dt))
+        u = jnp.einsum("becd,edf->becf", xg, params["up_es"].astype(dt))
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(dt) * u
+    else:
+        h = jnp.einsum("becd,edf->becf", xg, params["up_es"].astype(dt))
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(dt)
+    yo = jnp.einsum("becf,efd->becd", h, params["down_es"].astype(dt))
+
+    # Gather-based combine: each assignment reads back its expert slot.
+    slot_sorted = (
+        jnp.arange(a_n, dtype=jnp.int32)[None, :]
+        - jnp.take_along_axis(starts, sorted_e, axis=1)
+    )  # (B, A) position-in-expert, sorted order
+    pos = jnp.take_along_axis(slot_sorted, rank, axis=1)  # token-major
+    keep = pos < cap
+    aidx = jnp.clip(flat_e * cap + pos, 0, e * cap - 1)
+    vals = jnp.take_along_axis(
+        yo.reshape(b, e * cap, d), aidx[..., None], axis=1
+    )  # (B, A, d)
+    vals = vals * (flat_g * keep.astype(dt))[..., None]
+    y = vals.reshape(b, s, k, d).sum(axis=2)
+    y = shard(y, "batch", None, None)
+    return y, aux.astype(jnp.float32)
+
+
+def moe_apply_global(
+    params, x: jnp.ndarray, cfg: ModelConfig
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Global-capacity dispatch (the baseline layout; see moe_apply)."""
+    b, s, d = x.shape
+    t = b * s
+    k = cfg.experts_per_token
+    e = cfg.n_experts
+    cap = capacity(cfg, t)
+    dt = x.dtype
+
+    x2 = x.reshape(t, d)
+    logits = (x2 @ params["router"].astype(dt)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (T, E)
+    gates, eidx = jax.lax.top_k(probs, k)  # (T, k)
+    gates = gates / jnp.maximum(
+        jnp.sum(gates, axis=-1, keepdims=True), 1e-9
+    )  # renormalized top-k mixture (olmoe/mixtral convention)
+
+    # ---- sort-based position-in-expert (token-major priority) ----------
+    flat_e = eidx.reshape(-1).astype(jnp.int32)  # (T·k,)
+    flat_g = gates.reshape(-1).astype(dt)
+    flat_tok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=e).astype(jnp.int32)  # (E,)
+    starts = jnp.cumsum(counts) - counts
+    pos_sorted = jnp.arange(t * k, dtype=jnp.int32) - starts[sorted_e]
+    keep = pos_sorted < cap
+
+    # Aux load-balancing loss: E · Σ_e fraction_e · mean-prob_e (the
+    # fraction term is discrete — no gradient — as in Shazeer et al.).
+    frac = counts.astype(jnp.float32) / (t * k)
+    aux = e * jnp.sum(frac * jnp.mean(probs, axis=0))
+
+    # Scatter (expert, position) → source token / gate.  Dropped entries
+    # are routed to expert index `e` (out of bounds) and discarded by the
+    # scatter's mode="drop" — no write collisions with real slots.
+    tok_buf = jnp.zeros((e, cap), jnp.int32)
+    gate_buf = jnp.zeros((e, cap), dt)
+    se = jnp.where(keep, sorted_e, e)
+    sp = jnp.where(keep, pos_sorted, 0)
+    tok_buf = tok_buf.at[se, sp].set(flat_tok[order], mode="drop")
+    gate_buf = gate_buf.at[se, sp].set(flat_g[order], mode="drop")
+
+    xg = jnp.take(x2, tok_buf.reshape(-1), axis=0).reshape(e, cap, d)
+    xg = shard(xg, "model", None, None)
+
+    # ---- batched expert MLP --------------------------------------------
+    if cfg.mlp_type == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", xg, params["gate_es"].astype(dt))
+        u = jnp.einsum("ecd,edf->ecf", xg, params["up_es"].astype(dt))
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(dt) * u
+    else:
+        h = jnp.einsum("ecd,edf->ecf", xg, params["up_es"].astype(dt))
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(dt)
+    yo = jnp.einsum("ecf,efd->ecd", h, params["down_es"].astype(dt))
+    yo = yo * gate_buf[..., None]
+
+    # ---- combine --------------------------------------------------------
+    y2 = jnp.zeros((t, d), dt).at[tok_buf.reshape(-1)].add(
+        yo.reshape(-1, d), mode="drop"
+    )
+    return y2.reshape(b, s, d), aux.astype(jnp.float32)

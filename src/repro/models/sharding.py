@@ -1,0 +1,117 @@
+"""Activation/parameter sharding environment.
+
+Model code annotates activations with *logical* dimension names
+(``shard(x, "batch", None, "model")``); the launcher binds those names to
+physical mesh axes via :func:`set_axis_env`.  With no environment bound
+(CPU unit tests), every annotation is a no-op — the same model code runs
+on 1 device and on a 512-chip two-pod mesh.
+
+Parameter shardings are produced structurally: every ``init`` function in
+:mod:`repro.models` builds params as dicts whose leaf *names* carry the
+sharding intent, and :func:`param_specs` maps names to ``PartitionSpec``s:
+
+  leaf-name suffix        spec (logical)          physical (default env)
+  ----------------------  ----------------------  ----------------------
+  ``*_cs`` (column)       (None, "model")         TP column-parallel
+  ``*_rs`` (row)          ("model", None)         TP row-parallel
+  ``*_es`` (expert)       ("model", None, None)   expert-parallel
+  ``*_vs`` (vocab-major)  ("model", None)         vocab-sharded embedding
+  ``*_hs`` (head-vector)  ("model",)              per-head vectors
+  anything else           fully replicated
+
+Stacked period params (leading scan axis) get the spec shifted right by
+one ``None``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+Pytree = Any
+
+# Logical-name → mesh-axis (or tuple of axes) binding.  None → no-op.
+_ENV: Optional[Dict[str, Union[str, Tuple[str, ...], None]]] = None
+
+
+def set_axis_env(env: Optional[Dict[str, Any]]) -> None:
+    """Bind logical dimension names to physical mesh axes (None to clear).
+
+    The production binding (launch/mesh.py) is
+    ``{"batch": ("pod", "data"), "model": "model", "seq": "data"}``.
+    """
+    global _ENV
+    _ENV = env
+
+
+def get_axis_env():
+    return _ENV
+
+
+def axis_size(name: str) -> int:
+    """Product of mesh-axis sizes bound to a logical name (1 if unbound)."""
+    if _ENV is None or _ENV.get(name) is None:
+        return 1
+    axes = _ENV[name]
+    axes = (axes,) if isinstance(axes, str) else axes
+    import numpy as np
+
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return 1
+    return int(np.prod([dict(zip(mesh.axis_names, mesh.shape))[a] for a in axes]))
+
+
+def logical_to_spec(dims: Sequence[Optional[str]]) -> P:
+    assert _ENV is not None
+    return P(*[_ENV.get(d) if d else None for d in dims])
+
+
+def shard(x: jax.Array, *dims: Optional[str]) -> jax.Array:
+    """Constrain activation sharding by logical dim names (no-op unbound)."""
+    if _ENV is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, logical_to_spec(dims))
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs from leaf-name suffixes
+# ---------------------------------------------------------------------------
+
+_SUFFIX_DIMS = {
+    "_cs": (None, "model"),
+    "_rs": ("model", None),
+    "_es": ("model", None, None),
+    "_vs": ("model", None),
+    "_hs": ("model",),
+}
+
+
+def spec_for_leaf(name: str, ndim: int, stacked: bool) -> P:
+    dims: Tuple[Optional[str], ...] = ()
+    for suffix, d in _SUFFIX_DIMS.items():
+        if name.endswith(suffix):
+            dims = d
+            break
+    pad = ndim - len(dims) - (1 if stacked else 0)
+    full = ((None,) if stacked else ()) + (None,) * max(pad, 0) + dims
+    if _ENV is None:
+        return P(*full[:ndim])
+    return P(*[_ENV.get(d) if d else None for d in full[:ndim]])
+
+
+def param_specs(params: Pytree, stacked_prefix: str = "periods") -> Pytree:
+    """PartitionSpec tree mirroring ``params`` (see module docstring)."""
+
+    def walk(tree, path):
+        if isinstance(tree, dict):
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            out = [walk(v, path + (str(i),)) for i, v in enumerate(tree)]
+            return type(tree)(out)
+        stacked = any(p == stacked_prefix for p in path)
+        return spec_for_leaf(path[-1], tree.ndim, stacked)
+
+    return walk(params, ())

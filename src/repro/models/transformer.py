@@ -1,0 +1,403 @@
+"""Model assembly: decoder-only LMs, hybrid stacks, and encoder–decoder.
+
+Layers are grouped into the smallest repeating *period* of (mixer, ffn)
+kinds (``ModelConfig.period``): parameters are stacked across periods and
+the stack is driven by ``lax.scan``, so HLO size — and therefore 512-device
+compile time — is O(period), not O(depth).  Dense/MoE/SSM stacks have
+period 1; Jamba's 1-in-8-attention + every-other-MoE layout has period 8;
+Seamless scans encoder and decoder stacks separately.
+
+Three execution modes share the block code:
+
+* ``forward``      — full-sequence (train / prefill), no cache;
+* ``prefill``      — full-sequence with cache write-back (serving);
+* ``decode_step``  — one token against carried caches (KV or SSM state).
+
+The vocab-sharded cross-entropy (`lm_loss`) streams sequence chunks so the
+(B, S, V) logits tensor is never materialized — with V up to 152k and S up
+to 4k·batch this is the difference between fitting HBM and not.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mamba as ssm
+from repro.models import moe as moe_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    embed_apply,
+    embed_init,
+    lm_head_weights,
+    mlp_apply,
+    mlp_init,
+    norm_apply,
+    norm_init,
+    padded_vocab,
+    sinusoidal_positions,
+)
+from repro.models.sharding import shard
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _block_init(key, cfg: ModelConfig, mixer: str, ffn: str, tp: int,
+                cross: bool = False) -> Dict:
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {"mixer_norm": norm_init(cfg)}
+    if mixer == "attn":
+        p["attn"] = attn.attn_init(ks[0], cfg, tp)
+    else:
+        p["ssm"] = ssm.mamba_init(ks[0], cfg)
+    if cross:
+        p["cross_norm"] = norm_init(cfg)
+        p["cross_attn"] = attn.attn_init(ks[1], cfg, tp)
+    if ffn != "none":
+        p["ffn_norm"] = norm_init(cfg)
+    if ffn in ("mlp", "moe+mlp"):
+        p["mlp"] = mlp_init(ks[2], cfg)
+    if ffn in ("moe", "moe+mlp"):
+        p["moe"] = moe_mod.moe_init(ks[3], cfg)
+    return p
+
+
+def _block_apply(
+    params,
+    x,
+    cfg: ModelConfig,
+    mixer: str,
+    ffn: str,
+    *,
+    causal: bool = True,
+    cache=None,
+    memory=None,
+    positions=None,
+):
+    """One residual block; returns (x, new_cache, aux_loss)."""
+    h = norm_apply(params["mixer_norm"], x, cfg)
+    if mixer == "attn":
+        out, new_cache = attn.attn_apply(
+            params["attn"], h, cfg,
+            causal=causal, cache=cache, positions=positions,
+        )
+    else:
+        out, new_cache = ssm.mamba_apply(params["ssm"], h, cfg, state=cache)
+    x = x + out
+    x = shard(x, "batch", None, None)
+
+    if "cross_attn" in params:
+        h = norm_apply(params["cross_norm"], x, cfg)
+        out, _ = attn.attn_apply(
+            params["cross_attn"], h, cfg, causal=False, memory=memory
+        )
+        x = x + out
+
+    aux = jnp.float32(0.0)
+    if ffn != "none":
+        h = norm_apply(params["ffn_norm"], x, cfg)
+        y = 0.0
+        if "moe" in params:
+            ym, aux = moe_mod.moe_apply(params["moe"], h, cfg)
+            y = y + ym
+        if "mlp" in params:
+            y = y + mlp_apply(params["mlp"], h, cfg)
+        x = x + y
+        x = shard(x, "batch", None, None)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Stacks (scan over periods)
+# ---------------------------------------------------------------------------
+
+
+def _stack_init(key, cfg: ModelConfig, kinds, ffns, tp, cross=False,
+                n_total=None):
+    period = len(kinds)
+    n_total = n_total or cfg.n_layers
+
+    def one_period(k):
+        ks = jax.random.split(k, period)
+        return {
+            "blocks": [
+                _block_init(ks[i], cfg, kinds[i], ffns[i], tp, cross)
+                for i in range(period)
+            ]
+        }
+
+    keys = jax.random.split(key, n_total // period)
+    return jax.vmap(one_period)(keys)
+
+
+def _stack_apply(
+    stack_params,
+    x,
+    cfg: ModelConfig,
+    kinds,
+    ffns,
+    *,
+    causal=True,
+    caches=None,
+    memory=None,
+    positions=None,
+):
+    """Scan the period stack; returns (x, new_caches | None, aux_sum).
+
+    ``caches``/``memory`` (both optional) are pytrees whose leaves carry a
+    leading n_periods axis matching ``stack_params``; they join the scan's
+    xs as dict entries so one body serves all execution modes.
+    """
+    period = len(kinds)
+    has_caches = caches is not None
+    has_memory = memory is not None
+
+    xs: Dict[str, Any] = {"params": stack_params}
+    if has_caches:
+        xs["caches"] = caches
+    if has_memory:
+        xs["memory"] = memory
+
+    def body(carry, xs_t):
+        xc = carry
+        pparams = xs_t["params"]
+        pcaches = xs_t["caches"] if has_caches else [None] * period
+        pmemory = xs_t["memory"] if has_memory else [None] * period
+        new_caches = []
+        aux_sum = jnp.float32(0.0)
+        for i in range(period):
+            xc, nc, aux = _block_apply(
+                pparams["blocks"][i], xc, cfg, kinds[i], ffns[i],
+                causal=causal, cache=pcaches[i], memory=pmemory[i],
+                positions=positions,
+            )
+            new_caches.append(nc if nc is not None else 0)
+            aux_sum = aux_sum + aux
+        return xc, (new_caches, aux_sum)
+
+    if cfg.remat and not has_caches:  # decode paths don't backprop
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    x, (new_caches, auxs) = jax.lax.scan(body, x, xs)
+    return x, (new_caches if has_caches else None), jnp.sum(auxs)
+
+
+# ---------------------------------------------------------------------------
+# Top-level models
+# ---------------------------------------------------------------------------
+
+
+def init(key, cfg: ModelConfig, tp: int = 1) -> Pytree:
+    """Initialize the full parameter tree for any assigned architecture."""
+    ks = jax.random.split(key, 4)
+    kinds = cfg.layer_kinds()
+    ffns = cfg.ffn_kinds()
+    period = cfg.period()
+    params: Dict[str, Any] = {
+        "embed": embed_init(ks[0], cfg),
+        "periods": _stack_init(
+            key=ks[1], cfg=cfg,
+            kinds=kinds[:period], ffns=ffns[:period], tp=tp,
+            cross=cfg.cross_attention,
+        ),
+        "final_norm": norm_init(cfg),
+    }
+    if cfg.is_encdec:
+        params["encoder"] = {
+            "periods": _stack_init(
+                key=ks[2], cfg=cfg,
+                kinds=("attn",), ffns=("mlp",), tp=tp, cross=False,
+                n_total=cfg.encoder_layers,
+            ),
+            "final_norm": norm_init(cfg),
+        }
+    return params
+
+
+def _decoder_inputs(params, batch, cfg: ModelConfig):
+    """Token ids or precomputed embeddings (modality-stub archs)."""
+    if cfg.input_mode == "embeddings" and "embeds" in batch:
+        return batch["embeds"].astype(jnp.dtype(cfg.dtype))
+    return embed_apply(params["embed"], batch["tokens"], cfg)
+
+
+def _encode(params, batch, cfg: ModelConfig):
+    """Run the encoder stack over source embeddings/tokens (enc-dec)."""
+    if cfg.input_mode == "embeddings":
+        x = batch["src_embeds"].astype(jnp.dtype(cfg.dtype))
+    else:
+        x = embed_apply(params["embed"], batch["src_tokens"], cfg)
+    x = x + sinusoidal_positions(x.shape[1], x.shape[2], x.dtype)[None]
+    x, _, _ = _stack_apply(
+        params["encoder"]["periods"], x, cfg, ("attn",), ("mlp",),
+        causal=False,
+    )
+    return norm_apply(params["encoder"]["final_norm"], x, cfg)
+
+
+def _cross_memory(params, enc_out, cfg: ModelConfig):
+    """Per-decoder-layer cross-attention K/V, stacked over periods."""
+
+    def one_period(pparams):
+        return [
+            attn.encode_memory(bp["cross_attn"], enc_out, cfg)
+            for bp in pparams["blocks"]
+        ]
+
+    return jax.vmap(one_period, in_axes=0)(params["periods"])
+
+
+def forward_hidden(params, batch, cfg: ModelConfig):
+    """Full-sequence decoder forward; returns (hidden (B,S,D), aux_loss)."""
+    period = cfg.period()
+    kinds = cfg.layer_kinds()[:period]
+    ffns = cfg.ffn_kinds()[:period]
+    x = _decoder_inputs(params, batch, cfg)
+    memory = None
+    if cfg.is_encdec:
+        enc_out = _encode(params, batch, cfg)
+        memory = _cross_memory(params, enc_out, cfg)
+    if not cfg.rope and not cfg.is_encdec:
+        x = x + sinusoidal_positions(x.shape[1], x.shape[2], x.dtype)[None]
+    x, _, aux = _stack_apply(
+        params["periods"], x, cfg, kinds, ffns, causal=True, memory=memory
+    )
+    return norm_apply(params["final_norm"], x, cfg), aux
+
+
+def lm_loss(params, batch, cfg: ModelConfig):
+    """Causal-LM loss: chunked, vocab-sharded cross-entropy + MoE aux.
+
+    ``batch`` needs ``tokens``/``embeds`` (+ ``src_*`` for enc-dec) and
+    ``labels`` (int32, −1 = masked).  Returns (loss, metrics).
+    """
+    hidden, aux = forward_hidden(params, batch, cfg)
+    w = lm_head_weights(params["embed"], cfg)
+    labels = batch["labels"]
+    xent, n_tok = _chunked_xent(hidden, w, labels, cfg)
+    loss = xent + cfg.router_aux_coef * aux
+    return loss, {"xent": xent, "aux": aux, "tokens": n_tok}
+
+
+def _chunked_xent(hidden, w, labels, cfg: ModelConfig):
+    """Σ softmax-xent over sequence chunks; never materializes (B,S,V)."""
+    b, s, d = hidden.shape
+    v = w.shape[1]
+    chunk = min(cfg.logits_chunk, s)
+    n_chunks = (s + chunk - 1) // chunk
+    s_pad = n_chunks * chunk
+    hidden = jnp.pad(hidden, ((0, 0), (0, s_pad - s), (0, 0)))
+    labels = jnp.pad(labels, ((0, 0), (0, s_pad - s)), constant_values=-1)
+    hc = hidden.reshape(b, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+
+    vocab_mask = jnp.arange(v) < cfg.vocab_size  # mask padded vocab rows
+
+    def body(carry, xs):
+        tot, cnt = carry
+        h, lab = xs
+        logits = (h @ w).astype(jnp.float32)  # (B, chunk, V)
+        logits = shard(logits, "batch", None, "model")
+        logits = jnp.where(vocab_mask[None, None, :], logits, -1e30)
+        m = jnp.max(logits, axis=-1, keepdims=True)
+        lse = m[..., 0] + jnp.log(
+            jnp.sum(jnp.exp(logits - m), axis=-1)
+        )
+        ll = jnp.take_along_axis(
+            logits, jnp.maximum(lab, 0)[..., None], axis=-1
+        )[..., 0]
+        valid = lab >= 0
+        tot = tot + jnp.sum(jnp.where(valid, lse - ll, 0.0)).astype(jnp.float32)
+        cnt = cnt + jnp.sum(valid).astype(jnp.int32)
+        return (tot, cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.int32(0)), (hc, lc)
+    )
+    return tot / jnp.maximum(cnt, 1), cnt
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+class DecodeState(NamedTuple):
+    caches: Pytree  # stacked per-period list of KVCache/SSMState
+    memory: Optional[Pytree]  # cross-attention K/V (enc-dec only)
+    length: jnp.ndarray
+
+
+def init_decode_state(
+    cfg: ModelConfig, batch: int, max_len: int, tp: int = 1
+) -> DecodeState:
+    period = cfg.period()
+    kinds = cfg.layer_kinds()[:period]
+    n_periods = cfg.n_layers // period
+
+    def one(_):
+        slots = []
+        for kind in kinds:
+            if kind == "attn":
+                slots.append(attn.init_cache(cfg, batch, max_len, tp))
+            else:
+                slots.append(ssm.init_ssm_state(cfg, batch))
+        return slots
+
+    caches = jax.vmap(one)(jnp.arange(n_periods))
+    return DecodeState(caches=caches, memory=None, length=jnp.int32(0))
+
+
+def prefill(params, batch, state: DecodeState, cfg: ModelConfig):
+    """Consume the prompt, filling caches; returns (state, last_logits)."""
+    period = cfg.period()
+    kinds = cfg.layer_kinds()[:period]
+    ffns = cfg.ffn_kinds()[:period]
+    x = _decoder_inputs(params, batch, cfg)
+    memory = state.memory
+    if cfg.is_encdec:
+        enc_out = _encode(params, batch, cfg)
+        memory = _cross_memory(params, enc_out, cfg)
+    if not cfg.rope and not cfg.is_encdec:
+        x = x + sinusoidal_positions(x.shape[1], x.shape[2], x.dtype)[None]
+    x, caches, _ = _stack_apply(
+        params["periods"], x, cfg, kinds, ffns,
+        causal=True, caches=state.caches, memory=memory,
+    )
+    h = norm_apply(params["final_norm"], x[:, -1:, :], cfg)
+    logits = (h @ lm_head_weights(params["embed"], cfg)).astype(jnp.float32)
+    new_state = DecodeState(
+        caches=caches, memory=memory, length=state.length + x.shape[1]
+    )
+    return new_state, logits
+
+
+def decode_step(params, tokens, state: DecodeState, cfg: ModelConfig):
+    """One serving step: new token(s) (B, s) → logits; caches advance."""
+    period = cfg.period()
+    kinds = cfg.layer_kinds()[:period]
+    ffns = cfg.ffn_kinds()[:period]
+    x = embed_apply(params["embed"], tokens, cfg)
+    if not cfg.rope and not cfg.is_encdec:
+        pos = sinusoidal_positions(2**17, x.shape[2], x.dtype)
+        x = x + jax.lax.dynamic_slice_in_dim(
+            pos, state.length, x.shape[1], axis=0
+        )[None]
+    x, caches, _ = _stack_apply(
+        params["periods"], x, cfg, kinds, ffns,
+        causal=True, caches=state.caches, memory=state.memory,
+    )
+    h = norm_apply(params["final_norm"], x, cfg)
+    logits = (h @ lm_head_weights(params["embed"], cfg)).astype(jnp.float32)
+    new_state = DecodeState(
+        caches=caches, memory=state.memory, length=state.length + x.shape[1]
+    )
+    return logits, new_state

@@ -1,0 +1,26 @@
+"""repro.optim — first- and second-order optimizers + gradient compression."""
+
+from repro.optim.adam import AdamState, adam_init, adam_update
+from repro.optim.grad_compress import (
+    PowerSGDState,
+    compress,
+    compress_decompress,
+    decompress,
+    powersgd_init,
+)
+from repro.optim.hessian_free import (
+    HFConfig,
+    HFState,
+    hf_init,
+    hf_step,
+    softmax_xent_hvp,
+    squared_loss_hvp,
+)
+
+__all__ = [
+    "AdamState", "adam_init", "adam_update",
+    "PowerSGDState", "compress", "compress_decompress", "decompress",
+    "powersgd_init",
+    "HFConfig", "HFState", "hf_init", "hf_step",
+    "softmax_xent_hvp", "squared_loss_hvp",
+]

@@ -1,0 +1,59 @@
+"""AdamW — the first-order baseline optimizer (pytree-native)."""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class AdamState(NamedTuple):
+    mu: Pytree
+    nu: Pytree
+    count: jnp.ndarray
+
+
+def adam_init(params: Pytree) -> AdamState:
+    zeros = lambda p: jax.tree_util.tree_map(  # noqa: E731
+        lambda x: jnp.zeros_like(x, dtype=jnp.float32), p
+    )
+    return AdamState(mu=zeros(params), nu=zeros(params), count=jnp.int32(0))
+
+
+def adam_update(
+    grads: Pytree,
+    state: AdamState,
+    params: Pytree,
+    *,
+    lr: float = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+):
+    """One AdamW step; returns (new_params, new_state)."""
+    count = state.count + 1
+    cf = count.astype(jnp.float32)
+    bc1 = 1.0 - b1**cf
+    bc2 = 1.0 - b2**cf
+
+    mu = jax.tree_util.tree_map(
+        lambda m, g: b1 * m + (1.0 - b1) * g.astype(jnp.float32),
+        state.mu, grads,
+    )
+    nu = jax.tree_util.tree_map(
+        lambda v, g: b2 * v + (1.0 - b2) * jnp.square(g.astype(jnp.float32)),
+        state.nu, grads,
+    )
+
+    def step(p, m, v):
+        s = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        if weight_decay:
+            s = s + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * s).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map(step, params, mu, nu)
+    return new_params, AdamState(mu=mu, nu=nu, count=count)

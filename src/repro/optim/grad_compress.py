@@ -1,0 +1,137 @@
+"""PowerSGD gradient compression with *recycled* power-iteration bases.
+
+Beyond-paper feature, same core idea as the paper: a low-rank subspace
+learned from one step's computation is transferred to the next.  PowerSGD
+(Vogels et al.) compresses each ≥2-D gradient M (m×n) to rank r by one
+power iteration  P = M Q,  Q' = orth(Mᵀ P)  — reusing the previous step's
+Q as the starting basis is exactly "subspace recycling for gradients": as
+training settles, consecutive gradients share their dominant subspace, so
+one recycled iteration tracks it (the same drift argument as paper §3).
+
+Error feedback (e ← M − P Q'ᵀ, added to the next gradient) keeps the
+compression unbiased in the long run.  At scale, only P and Q (m·r + n·r
+values instead of m·n) cross the DP/pod axis — an ~(m·n)/(r·(m+n))×
+reduction in gradient all-reduce bytes; the all-reduce itself is applied
+by the caller between :func:`compress` and :func:`decompress` (the train
+step psums P and Q like any other tensor).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class PowerSGDState(NamedTuple):
+    q: Pytree  # per-leaf (n, r) recycled basis (None-like zeros for 1-D)
+    error: Pytree  # error-feedback memory, same shapes as grads
+
+
+def _as_matrix(x: jnp.ndarray):
+    if x.ndim == 1:
+        return None
+    return x.reshape(x.shape[0], -1)
+
+
+def powersgd_init(params: Pytree, rank: int, key) -> PowerSGDState:
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    keys = jax.random.split(key, len(leaves))
+
+    def mk_q(p, k):
+        m = _as_matrix(p)
+        if m is None:
+            return jnp.zeros((0,), jnp.float32)
+        n = m.shape[1]
+        q, _ = jnp.linalg.qr(jax.random.normal(k, (n, rank), jnp.float32))
+        return q
+
+    qs = [mk_q(p, k) for p, k in zip(leaves, keys)]
+    return PowerSGDState(
+        q=jax.tree_util.tree_unflatten(treedef, qs),
+        error=jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, jnp.float32), params
+        ),
+    )
+
+
+def _orthonormalize(m: jnp.ndarray) -> jnp.ndarray:
+    q, _ = jnp.linalg.qr(m)
+    return q
+
+
+def compress(
+    grads: Pytree, state: PowerSGDState
+) -> Tuple[Pytree, Pytree, Pytree]:
+    """Returns (P tree, Q' tree, low-rank-input tree).  P/Q' are what a
+    data-parallel caller all-reduces (means) before :func:`decompress`."""
+
+    def one(g, q, e):
+        m = _as_matrix(g)
+        if m is None:
+            return g.astype(jnp.float32), q, g.astype(jnp.float32)
+        mf = m.astype(jnp.float32) + e.reshape(m.shape)
+        p = mf @ q  # (m, r)
+        p = _orthonormalize(p)
+        q_new = mf.T @ p  # (n, r) — recycled basis for next step
+        return p, q_new, mf
+
+    trees = jax.tree_util.tree_map(one, grads, state.q, state.error)
+    p_tree = jax.tree_util.tree_map(
+        lambda t: t[0], trees, is_leaf=lambda t: isinstance(t, tuple)
+    )
+    q_tree = jax.tree_util.tree_map(
+        lambda t: t[1], trees, is_leaf=lambda t: isinstance(t, tuple)
+    )
+    m_tree = jax.tree_util.tree_map(
+        lambda t: t[2], trees, is_leaf=lambda t: isinstance(t, tuple)
+    )
+    return p_tree, q_tree, m_tree
+
+
+def decompress(
+    grads: Pytree,
+    p_tree: Pytree,
+    q_tree: Pytree,
+    m_tree: Pytree,
+) -> Tuple[Pytree, PowerSGDState]:
+    """Rebuild M̂ = P Q'ᵀ, update error feedback, return (ĝ, new state)."""
+
+    def one(g, p, q, mf):
+        if g.ndim == 1:
+            return g.astype(jnp.float32), q, jnp.zeros_like(g, jnp.float32)
+        approx = p @ q.T  # (m, n)
+        err = mf - approx
+        return approx.reshape(g.shape), q, err.reshape(g.shape)
+
+    trees = jax.tree_util.tree_map(one, grads, p_tree, q_tree, m_tree)
+    ghat = jax.tree_util.tree_map(
+        lambda t: t[0], trees, is_leaf=lambda t: isinstance(t, tuple)
+    )
+    q_new = jax.tree_util.tree_map(
+        lambda t: t[1], trees, is_leaf=lambda t: isinstance(t, tuple)
+    )
+    err = jax.tree_util.tree_map(
+        lambda t: t[2], trees, is_leaf=lambda t: isinstance(t, tuple)
+    )
+    return ghat, PowerSGDState(q=q_new, error=err)
+
+
+def compress_decompress(
+    grads: Pytree, state: PowerSGDState
+) -> Tuple[Pytree, PowerSGDState, dict]:
+    """Single-process convenience (tests / single-host): compress +
+    decompress without a collective in between; returns compression
+    metrics (bytes ratio)."""
+    p_tree, q_tree, m_tree = compress(grads, state)
+    ghat, new_state = decompress(grads, p_tree, q_tree, m_tree)
+
+    def nbytes(t):
+        return sum(x.size for x in jax.tree_util.tree_leaves(t))
+
+    dense = nbytes(grads)
+    compressed = nbytes(p_tree) + nbytes(q_tree)
+    return ghat, new_state, {"compression_ratio": dense / max(compressed, 1)}

@@ -1,0 +1,5 @@
+"""repro.runtime — fault-tolerant training loop."""
+
+from repro.runtime.trainer import Trainer, TrainerConfig, TrainerEvents
+
+__all__ = ["Trainer", "TrainerConfig", "TrainerEvents"]

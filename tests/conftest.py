@@ -1,0 +1,41 @@
+"""Shared pytest fixtures.
+
+x64 is enabled globally for the test session: solver correctness tests
+need double precision, and all model code passes explicit dtypes so this
+does not perturb the (bf16/f32) smoke tests.  Device count stays 1 — only
+`repro/launch/dryrun.py` (a separate process) requests 512 host devices.
+"""
+
+import hypothesis
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+# Deterministic property tests (shared CI boxes; examples replay exactly).
+hypothesis.settings.register_profile(
+    "ci", derandomize=True, deadline=None, max_examples=15
+)
+hypothesis.settings.load_profile("ci")
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_between_modules():
+    """Free compiled-executable memory between test modules — the full
+    suite compiles hundreds of programs in one process (1-core CPU box)."""
+    yield
+    jax.clear_caches()
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_spd(n, cond=1e3, rng=None, dtype=np.float64):
+    """Random SPD matrix with a controlled, log-spaced spectrum."""
+    rng = rng or np.random.default_rng(0)
+    q, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    eigs = np.logspace(0, np.log10(cond), n)
+    return (q * eigs) @ q.T.astype(dtype), eigs, q

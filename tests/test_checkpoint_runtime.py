@@ -1,0 +1,181 @@
+"""Checkpoint + fault-tolerant runtime tests.
+
+The headline invariant: a training run killed at an arbitrary step and
+restarted must produce bit-identical final state to an uninterrupted run
+(deterministic data + checkpointed state ⇒ exact replay).
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, restore_pytree, save_pytree
+from repro.data import TokenPipeline
+from repro.runtime import Trainer, TrainerConfig
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        tree = {
+            "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.bfloat16)},
+            "scalar": jnp.int32(7),
+        }
+        path = save_pytree(tree, str(tmp_path), step=3)
+        out = restore_pytree(tree, path)
+        for a, b in zip(
+            jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(out)
+        ):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            assert a.dtype == b.dtype
+
+    def test_manager_retention_and_latest(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        tree = {"x": jnp.zeros(3)}
+        for s in (1, 2, 3, 4):
+            mgr.save({"x": jnp.full(3, float(s))}, s)
+        assert mgr.steps() == [3, 4]
+        step, out, _ = mgr.restore_latest(tree)
+        assert step == 4
+        np.testing.assert_allclose(np.asarray(out["x"]), 4.0)
+
+    def test_corrupt_tail_falls_back(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=5)
+        tree = {"x": jnp.zeros(3)}
+        mgr.save({"x": jnp.full(3, 1.0)}, 1)
+        mgr.save({"x": jnp.full(3, 2.0)}, 2)
+        # corrupt the newest checkpoint
+        victim = os.path.join(str(tmp_path), "step_00000002", "arrays.npz")
+        with open(victim, "wb") as f:
+            f.write(b"garbage")
+        step, out, _ = mgr.restore_latest(tree)
+        assert step == 1
+        np.testing.assert_allclose(np.asarray(out["x"]), 1.0)
+
+    def test_structure_mismatch_rejected(self, tmp_path):
+        path = save_pytree({"x": jnp.zeros(3)}, str(tmp_path), step=1)
+        with pytest.raises(ValueError):
+            restore_pytree({"y": jnp.zeros(3)}, path)
+
+
+def _toy_step(state, batch):
+    params, count = state
+    grad = jax.tree_util.tree_map(
+        lambda p: p - jnp.float32(batch["tokens"].sum() % 7), params
+    )
+    params = jax.tree_util.tree_map(lambda p, g: p - 0.01 * g, params, grad)
+    return (params, count + 1), {"count": count + 1}
+
+
+class TestTrainer:
+    def _pipeline(self):
+        return TokenPipeline(vocab_size=97, batch=2, seq_len=16, seed=0)
+
+    def test_uninterrupted_run(self, tmp_path):
+        pipe = self._pipeline()
+        cfg = TrainerConfig(
+            total_steps=12, checkpoint_every=4,
+            checkpoint_dir=str(tmp_path), async_checkpoint=False,
+        )
+        state0 = ({"w": jnp.ones(4)}, jnp.int32(0))
+        t = Trainer(_toy_step, pipe.make_batch, state0, cfg)
+        out = t.run()
+        assert out["final_step"] == 12
+
+    def test_crash_replay_is_exact(self, tmp_path):
+        pipe = self._pipeline()
+        state0 = ({"w": jnp.ones(4)}, jnp.int32(0))
+
+        # Reference: uninterrupted.
+        ref_cfg = TrainerConfig(
+            total_steps=12, checkpoint_every=3,
+            checkpoint_dir=str(tmp_path / "ref"), async_checkpoint=False,
+        )
+        ref = Trainer(_toy_step, pipe.make_batch, state0, ref_cfg).run()
+
+        # Faulty: dies at steps 5 and 8, must recover and match exactly.
+        fails = {5: True, 8: True}
+
+        def fault_hook(step):
+            if fails.pop(step, False):
+                raise RuntimeError("injected device failure")
+
+        cfg = TrainerConfig(
+            total_steps=12, checkpoint_every=3,
+            checkpoint_dir=str(tmp_path / "faulty"), async_checkpoint=False,
+        )
+        out = Trainer(
+            _toy_step, pipe.make_batch, state0, cfg, fault_hook=fault_hook
+        ).run()
+        assert out["events"].restarts == 2
+        np.testing.assert_array_equal(
+            np.asarray(out["state"][0]["w"]), np.asarray(ref["state"][0]["w"])
+        )
+        assert int(out["state"][1]) == int(ref["state"][1])
+
+    def test_resume_after_preemption(self, tmp_path):
+        pipe = self._pipeline()
+        state0 = ({"w": jnp.ones(4)}, jnp.int32(0))
+        cfg = TrainerConfig(
+            total_steps=12, checkpoint_every=2,
+            checkpoint_dir=str(tmp_path), async_checkpoint=False,
+        )
+        # First process: preempt after step 6.
+        t1 = Trainer(_toy_step, pipe.make_batch, state0, cfg)
+
+        orig = t1.step_fn
+
+        def stopping_step(state, batch):
+            out = orig(state, batch)
+            if int(out[0][1]) >= 6:
+                t1.request_stop()
+            return out
+
+        t1.step_fn = stopping_step
+        t1.run()
+
+        # Second process: picks up where the first left off, finishes.
+        t2 = Trainer(_toy_step, pipe.make_batch, state0, cfg)
+        assert t2.start_step >= 6
+        out = t2.run()
+        assert out["final_step"] == 12
+
+    def test_straggler_detection(self, tmp_path):
+        """Deterministic via an injected fake clock: every step 'takes'
+        0.01s except step 9, which 'takes' 1.0s (100× the median)."""
+        pipe = self._pipeline()
+        state0 = ({"w": jnp.ones(4)}, jnp.int32(0))
+
+        fake = {"t": 0.0, "step": 0, "phase": 0}
+
+        def fake_clock():
+            # called twice per step: start and end
+            if fake["phase"] == 0:
+                fake["phase"] = 1
+            else:
+                fake["phase"] = 0
+                fake["t"] += 1.0 if fake["step"] == 9 else 0.01
+                fake["step"] += 1
+            return fake["t"]
+
+        cfg = TrainerConfig(
+            total_steps=12, checkpoint_every=100,
+            checkpoint_dir=str(tmp_path), async_checkpoint=False,
+            straggler_factor=3.0,
+        )
+        out = Trainer(
+            _toy_step, pipe.make_batch, state0, cfg, time_fn=fake_clock
+        ).run()
+        assert out["events"].stragglers >= 1
+        assert any("straggler" in line for line in out["events"].log)
+
+    def test_data_pipeline_deterministic(self):
+        pipe = self._pipeline()
+        b1 = pipe.make_batch(7)
+        b2 = pipe.make_batch(7)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+        b3 = pipe.make_batch(8)
+        assert not np.array_equal(b1["tokens"], b3["tokens"])

@@ -1,0 +1,230 @@
+"""Per-kernel validation: Pallas (interpret=True) and chunked impls vs the
+pure-jnp oracles in kernels/ref.py, swept over shapes and dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+F32 = jnp.float32
+BF16 = jnp.bfloat16
+
+
+def _tol(dtype, scale=1.0):
+    return dict(
+        rtol=scale * (2e-2 if dtype == BF16 else 2e-4),
+        atol=scale * (5e-2 if dtype == BF16 else 5e-4),
+    )
+
+
+# ---------------------------------------------------------------------------
+# rbf_matvec
+# ---------------------------------------------------------------------------
+
+
+class TestRBFMatvec:
+    @pytest.mark.parametrize("impl", ["interpret", "chunked"])
+    @pytest.mark.parametrize(
+        "n,d,r", [(64, 3, 1), (200, 17, 4), (257, 784, 8), (8, 1, 1)]
+    )
+    def test_matches_oracle(self, impl, n, d, r):
+        rng = np.random.default_rng(n + d + r)
+        x = jnp.asarray(rng.standard_normal((n, d)), F32)
+        v = jnp.asarray(rng.standard_normal((n, r)), F32)
+        theta, ls = 1.3, 2.1
+        # Oracle in float64 — the kernels' f32 distance expansion is the
+        # thing under test.
+        want = np.asarray(
+            ref.rbf_matvec(x.astype(jnp.float64), v.astype(jnp.float64), theta, ls)
+        )
+        got = np.asarray(
+            ops.rbf_matvec(x, v, theta, ls, impl=impl, block=64)
+        )
+        scale = max(1.0, np.abs(want).max())
+        np.testing.assert_allclose(got / scale, want / scale, **_tol(F32))
+
+    def test_single_vector_shape(self):
+        x = jnp.ones((10, 2), F32)
+        v = jnp.ones((10,), F32)
+        y = ops.rbf_matvec(x, v, 1.0, 1.0, impl="chunked")
+        assert y.shape == (10,)
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        n=st.integers(4, 150),
+        d=st.integers(1, 40),
+        r=st.integers(1, 5),
+        block=st.sampled_from([16, 32, 128]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_property_chunked_any_shape(self, n, d, r, block, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((n, d)), F32)
+        v = jnp.asarray(rng.standard_normal((n, r)), F32)
+        want = np.asarray(ref.rbf_matvec(x, v, 0.9, 1.4))
+        got = np.asarray(ops.rbf_matvec(x, v, 0.9, 1.4, impl="chunked", block=block))
+        scale = max(1.0, np.abs(want).max())
+        np.testing.assert_allclose(got / scale, want / scale, **_tol(F32))
+
+    def test_multirhs_equals_stacked_single(self):
+        # multi-RHS fused pass (the A·W refresh path) == k single matvecs
+        rng = np.random.default_rng(5)
+        x = jnp.asarray(rng.standard_normal((40, 6)), F32)
+        V = jnp.asarray(rng.standard_normal((40, 3)), F32)
+        multi = ops.rbf_matvec(x, V, 1.1, 0.8, impl="interpret", block=32)
+        singles = jnp.stack(
+            [
+                ops.rbf_matvec(x, V[:, i], 1.1, 0.8, impl="interpret", block=32)
+                for i in range(3)
+            ],
+            axis=1,
+        )
+        np.testing.assert_allclose(multi, singles, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+ATTN_CASES = [
+    # b, h, hkv, sq, sk, dh, causal, q_offset
+    (2, 4, 2, 64, 64, 32, False, 0),
+    (1, 8, 2, 96, 96, 64, True, 0),
+    (2, 4, 4, 1, 133, 64, True, 132),   # decode
+    (1, 2, 1, 40, 200, 16, False, 0),   # cross-attention shape
+    (1, 16, 2, 33, 33, 128, True, 0),   # ragged blocks
+]
+
+
+class TestAttention:
+    @pytest.mark.parametrize("impl", ["interpret", "chunked"])
+    @pytest.mark.parametrize("case", ATTN_CASES)
+    @pytest.mark.parametrize("dtype", [F32, BF16])
+    def test_matches_oracle(self, impl, case, dtype):
+        b, h, hkv, sq, sk, dh, causal, q_offset = case
+        rng = np.random.default_rng(abs(hash(case)) % 2**31)
+        q = jnp.asarray(rng.standard_normal((b, h, sq, dh)), dtype)
+        k = jnp.asarray(rng.standard_normal((b, hkv, sk, dh)), dtype)
+        v = jnp.asarray(rng.standard_normal((b, hkv, sk, dh)), dtype)
+        want = np.asarray(
+            ref.mha_attention(
+                q.astype(F32), k.astype(F32), v.astype(F32),
+                causal=causal, q_offset=q_offset,
+            )
+        )
+        got = np.asarray(
+            ops.attention(
+                q, k, v, causal=causal, q_offset=q_offset,
+                impl=impl, block_q=32, block_k=32,
+            )
+        ).astype(np.float32)
+        np.testing.assert_allclose(got, want, **_tol(dtype))
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        sq=st.integers(1, 70),
+        sk=st.integers(1, 70),
+        dh=st.sampled_from([8, 16, 32]),
+        causal=st.booleans(),
+        seed=st.integers(0, 2**16),
+    )
+    def test_property_chunked(self, sq, sk, dh, causal, seed):
+        if causal and sq > sk:
+            sq = sk  # causal requires q positions within the cache
+        rng = np.random.default_rng(seed)
+        q = jnp.asarray(rng.standard_normal((1, 2, sq, dh)), F32)
+        k = jnp.asarray(rng.standard_normal((1, 2, sk, dh)), F32)
+        v = jnp.asarray(rng.standard_normal((1, 2, sk, dh)), F32)
+        off = sk - sq if causal else 0
+        want = np.asarray(
+            ref.mha_attention(q, k, v, causal=causal, q_offset=off)
+        )
+        got = np.asarray(
+            ops.attention(
+                q, k, v, causal=causal, q_offset=off,
+                impl="chunked", block_q=16, block_k=16,
+            )
+        )
+        np.testing.assert_allclose(got, want, **_tol(F32))
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+
+SSD_CASES = [
+    # b, l, h, p, g, n, chunk
+    (1, 64, 2, 16, 1, 16, 32),
+    (2, 100, 4, 8, 2, 24, 32),
+    (1, 37, 2, 4, 2, 8, 16),     # ragged chunk
+    (2, 128, 8, 32, 1, 64, 64),
+]
+
+
+class TestSSD:
+    @pytest.mark.parametrize("impl", ["interpret", "chunked"])
+    @pytest.mark.parametrize("case", SSD_CASES)
+    def test_matches_sequential_oracle(self, impl, case):
+        b, l, h, p, g, n, chunk = case
+        rng = np.random.default_rng(abs(hash(case)) % 2**31)
+        x = jnp.asarray(rng.standard_normal((b, l, h, p)), F32)
+        dt = jnp.asarray(rng.uniform(0.01, 0.4, (b, l, h)), F32)
+        a = jnp.asarray(-rng.uniform(0.3, 2.0, (h,)), F32)
+        B = jnp.asarray(rng.standard_normal((b, l, g, n)), F32)
+        C = jnp.asarray(rng.standard_normal((b, l, g, n)), F32)
+        D = jnp.asarray(rng.standard_normal((h,)), F32)
+        want = np.asarray(ref.ssd_reference(x, dt, a, B, C, D))
+        got = np.asarray(
+            ops.ssd(x, dt, a, B, C, D, impl=impl, chunk=chunk)
+        )
+        scale = max(1.0, np.abs(want).max())
+        np.testing.assert_allclose(got / scale, want / scale, **_tol(F32, 2.0))
+
+    def test_decode_step_matches_scan(self):
+        """Feeding tokens one-by-one through ssd_decode_step must equal the
+        full-sequence scan — the serve-path invariant."""
+        b, l, h, p, g, n = 2, 20, 2, 8, 1, 8
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.standard_normal((b, l, h, p)), F32)
+        dt = jnp.asarray(rng.uniform(0.05, 0.3, (b, l, h)), F32)
+        a = jnp.asarray(-rng.uniform(0.5, 1.5, (h,)), F32)
+        B = jnp.asarray(rng.standard_normal((b, l, g, n)), F32)
+        C = jnp.asarray(rng.standard_normal((b, l, g, n)), F32)
+        full = ref.ssd_reference(x, dt, a, B, C)
+        state = jnp.zeros((b, h, p, n), F32)
+        outs = []
+        for t in range(l):
+            state, y = ops.ssd_decode_step(
+                state, x[:, t], dt[:, t], a, B[:, t], C[:, t]
+            )
+            outs.append(y)
+        got = jnp.stack(outs, axis=1)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(full), rtol=1e-4, atol=1e-4
+        )
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        l=st.integers(2, 80),
+        chunk=st.sampled_from([8, 16, 64]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_property_chunk_invariance(self, l, chunk, seed):
+        """Output must be independent of the chunk size (pure blocking)."""
+        rng = np.random.default_rng(seed)
+        b, h, p, g, n = 1, 2, 4, 1, 8
+        x = jnp.asarray(rng.standard_normal((b, l, h, p)), F32)
+        dt = jnp.asarray(rng.uniform(0.01, 0.4, (b, l, h)), F32)
+        a = jnp.asarray(-rng.uniform(0.3, 2.0, (h,)), F32)
+        B = jnp.asarray(rng.standard_normal((b, l, g, n)), F32)
+        C = jnp.asarray(rng.standard_normal((b, l, g, n)), F32)
+        y1 = ops.ssd(x, dt, a, B, C, impl="chunked", chunk=chunk)
+        y2 = ops.ssd(x, dt, a, B, C, impl="chunked", chunk=2 * chunk)
+        np.testing.assert_allclose(
+            np.asarray(y1), np.asarray(y2), rtol=1e-4, atol=1e-4
+        )
