@@ -23,7 +23,13 @@ def log(msg: str):
     print(msg, file=sys.stderr, flush=True)
 
 
+# Every emit() is also recorded here so run.py can dump a machine-readable
+# BENCH_solvers.json next to the CSV stream (perf-trajectory tracking).
+RESULTS: list = []  # (name, us_per_call, derived)
+
+
 def emit(name: str, us_per_call: float, derived: str = ""):
+    RESULTS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
 

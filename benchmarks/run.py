@@ -1,6 +1,9 @@
 """Benchmark harness — one entry per paper table/figure + system benches.
 
-Prints ``name,us_per_call,derived`` CSV to stdout (human logs on stderr).
+Prints ``name,us_per_call,derived`` CSV to stdout (human logs on stderr)
+and writes ``BENCH_solvers.json`` next to this file (repo root parent):
+``{"sections": {section: {bench_name: us_per_call}}, "derived": {...}}`` —
+the machine-readable perf trajectory, one snapshot per run.
 Sections:
   table1   — paper Table 1 (Cholesky/CG/def-CG Newton trace)
   fig2/3   — paper Fig 2 (iterations/system) + Fig 3 (residual slopes)
@@ -13,18 +16,23 @@ Sections:
 
 from __future__ import annotations
 
+import json
 import os
 import sys
+import time
 import traceback
 
 
 def main() -> None:
+    from benchmarks import common
     from benchmarks.common import emit, log
 
     sections = []
+    section_results: dict = {}
 
     def section(name, fn):
         log(f"\n===== {name} =====")
+        mark = len(common.RESULTS)
         try:
             fn()
             sections.append((name, "ok"))
@@ -32,6 +40,7 @@ def main() -> None:
             traceback.print_exc()
             emit(f"{name}/FAILED", 0.0, repr(exc)[:80])
             sections.append((name, f"FAILED: {exc!r}"))
+        section_results[name] = common.RESULTS[mark:]
 
     from benchmarks import (
         hf_recycle_bench,
@@ -60,6 +69,29 @@ def main() -> None:
             emit("roofline/cells", 0.0, f"rows={n_rows}")
 
         section("roofline", roofline_section)
+
+    payload = {
+        "schema": "bench_solvers/v1",
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "bench_n": common.BENCH_N,
+        "status": dict(sections),
+        "sections": {
+            name: {r[0]: r[1] for r in rows}
+            for name, rows in section_results.items()
+        },
+        "derived": {
+            r[0]: r[2]
+            for rows in section_results.values()
+            for r in rows
+            if r[2]
+        },
+    }
+    json_path = os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_solvers.json"
+    )
+    with open(json_path, "w") as fh:
+        json.dump(payload, fh, indent=2, sort_keys=True)
+    log(f"\nwrote {os.path.normpath(json_path)}")
 
     log("\n===== summary =====")
     for name, status in sections:

@@ -22,6 +22,7 @@ import functools
 from typing import Any, Sequence
 
 import jax
+import jax.flatten_util
 import jax.numpy as jnp
 
 Pytree = Any
@@ -91,6 +92,55 @@ def _acc_dtype(dtype):
     if dtype == jnp.float64:
         return jnp.float64
     return jnp.promote_types(dtype, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Flat-vector packing (the solver fast path)
+# ---------------------------------------------------------------------------
+#
+# The CG/def-CG inner loop runs on *contiguous* ``(n,)`` arrays: a solve
+# flattens its pytree once at entry, iterates on flat state (one fused HBM
+# pass instead of a tree_map per op — DESIGN.md §8), and unflattens once at
+# exit.  Bases flatten to 2-D ``(m, n)`` arrays whose column order matches
+# :func:`ravel_vector`, so flat GEMVs agree with ``basis_dot`` et al.
+
+
+def ravel_vector(tree: Pytree):
+    """Flatten a pytree vector to ``(flat, unravel)``.
+
+    ``flat`` is a contiguous ``(n,)`` array (leaves concatenated in
+    ``tree_leaves`` order, mixed dtypes promoted); ``unravel`` maps a flat
+    array back to the original structure.  For an already-flat ``(n,)``
+    array this is the identity (no copy after XLA fusion).
+    """
+    return jax.flatten_util.ravel_pytree(tree)
+
+
+def ravel(tree: Pytree) -> jnp.ndarray:
+    """Just the flat ``(n,)`` array of :func:`ravel_vector`."""
+    return jax.flatten_util.ravel_pytree(tree)[0]
+
+
+def ravel_basis(basis: Pytree) -> jnp.ndarray:
+    """Flatten a stacked basis to a 2-D ``(m, n)`` array.
+
+    Row ``i`` equals ``ravel(basis_vector(basis, i))`` — column order (and
+    dtype promotion) match :func:`ravel_vector`, so ``flat_basis @ flat_v``
+    computes the same inner products as :func:`basis_dot`.
+    """
+    leaves = jax.tree_util.tree_leaves(basis)
+    m = leaves[0].shape[0]
+    dtype = functools.reduce(
+        jnp.promote_types, [l.dtype for l in leaves[1:]], leaves[0].dtype
+    )
+    return jnp.concatenate(
+        [l.reshape(m, -1).astype(dtype) for l in leaves], axis=1
+    )
+
+
+def unravel_basis(flat: jnp.ndarray, unravel) -> Pytree:
+    """Inverse of :func:`ravel_basis` given a vector ``unravel`` (vmapped)."""
+    return jax.vmap(unravel)(flat)
 
 
 # ---------------------------------------------------------------------------

@@ -3,11 +3,19 @@
 This file implements the paper's Algorithm 1 (Saad et al.'s deflated
 conjugate gradient) as a jit-able, pytree-native, shardable solver:
 
-* vectors are arbitrary pytrees (``repro.core.pytree``);
+* vectors are arbitrary pytrees (``repro.core.pytree``) at the API; the
+  *inner loop* runs on a contiguous flat ``(n,)`` vector — each solve packs
+  its pytree once (``pt.ravel_vector``), iterates on flat state, and
+  unpacks once at exit (the flat-engine fast path, DESIGN.md §8);
 * ``A`` is any matrix-free operator (``repro.core.operators``);
 * the main iteration is a ``jax.lax.while_loop`` so the entire solve — and
   therefore an entire Hessian-free optimizer step that embeds it — lowers
   to a single XLA computation that pjit can shard across a pod;
+* the non-matvec vector work of an iteration lowers to two fused passes
+  (``repro.kernels.ops.fused_cg_update`` / ``fused_deflate_direction``:
+  Pallas kernels on TPU, fused-jnp elsewhere) instead of ~8 separate HBM
+  sweeps — in the memory-bound regime the paper targets this, not the
+  matvec, is the bottleneck;
 * the first ``ell`` search directions and their ``A``-products are recorded
   into fixed-size ring buffers, which is all the harmonic-Ritz recycling
   step (``repro.core.recycle``) needs — zero extra matvecs, exactly the
@@ -22,14 +30,14 @@ lines 3 & 11):
     p0  = r0 − W μ0,        WᵀAW μ0 = WᵀA r0
     p_j = β p_{j-1} + r_j − W μ_j,  WᵀAW μ_j = WᵀA r_j
 
-``WᵀA r`` is evaluated as ``(AW)ᵀ r`` (A symmetric), so the per-iteration
-deflation overhead is two tall-skinny GEMVs + one k×k triangular solve —
+``WᵀA r`` is evaluated as ``(AW)ᵀ r`` (A symmetric) and fused into the
+residual-update pass, so the per-iteration deflation overhead is one k×k
+triangular solve plus the ``W μ`` combine inside the direction pass —
 O(nk) flops and *no* additional collectives beyond the two GEMV psums.
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
@@ -37,6 +45,7 @@ import jax.numpy as jnp
 from jax.scipy.linalg import cho_factor, cho_solve
 
 from repro.core import pytree as pt
+from repro.kernels import ops as kops
 
 Pytree = Any
 
@@ -71,6 +80,15 @@ def _tolerances(b, tol, atol):
     return jnp.maximum(tol * bnorm, atol), bnorm
 
 
+def _flat_operator(op, unravel):
+    """Lift a pytree matvec/preconditioner to flat ``(n,)`` vectors."""
+
+    def mv(v_flat):
+        return pt.ravel(op(unravel(v_flat)))
+
+    return mv
+
+
 # ---------------------------------------------------------------------------
 # Conjugate gradients (the paper's CG baseline)
 # ---------------------------------------------------------------------------
@@ -91,17 +109,23 @@ def cg(
 
     ``M`` is an (SPD) preconditioner apply ``r ↦ M⁻¹ r``; ``None`` gives
     plain CG, matching the paper's baseline.
-    """
-    if x0 is None:
-        x0 = pt.tree_zeros_like(b)
-    precond = M if M is not None else (lambda v: v)
 
-    r0 = pt.tree_sub(b, A(x0))
-    z0 = precond(r0)
+    The loop carries ``rᵀz`` through its state (computed once per
+    iteration, not twice), and without a preconditioner the recurrence
+    scalar is the ``‖r‖²`` reduction the fused update pass already emits —
+    plain CG costs exactly one reduction per iteration beyond ``pᵀAp``.
+    """
+    b_flat, unravel = pt.ravel_vector(b)
+    x_flat = jnp.zeros_like(b_flat) if x0 is None else pt.ravel(x0)
+    A_flat = _flat_operator(A, unravel)
+    precond = _flat_operator(M, unravel) if M is not None else None
+
+    r0 = b_flat - A_flat(x_flat)
+    z0 = precond(r0) if precond is not None else r0
     p0 = z0
     rz0 = pt.tree_dot(r0, z0)
     rnorm0 = pt.tree_norm(r0)
-    threshold, _ = _tolerances(b, tol, atol)
+    threshold, _ = _tolerances(b_flat, tol, atol)
 
     if record_residuals:
         trace0 = jnp.full((maxiter + 1,), jnp.nan, dtype=rnorm0.dtype)
@@ -109,33 +133,39 @@ def cg(
     else:
         trace0 = None
 
-    diverged_at = 1e8 * jnp.maximum(rnorm0, pt.tree_norm(b))
+    diverged_at = 1e8 * jnp.maximum(rnorm0, pt.tree_norm(b_flat))
 
     def cond(state):
-        j, _, _, _, _, rnorm, _, brk = state
+        j, _, _, _, _, _, rnorm, _, brk = state
         return (j < maxiter) & (rnorm > threshold) & (~brk)
 
     def body(state):
-        j, x, r, z, p, rnorm, trace, brk = state
-        ap = A(p)
+        j, x, r, z, p, rz, rnorm, trace, brk = state
+        ap = A_flat(p)
         d = pt.tree_dot(p, ap)
         brk = (d <= 0.0) | (~jnp.isfinite(d)) | (rnorm > diverged_at)
-        rz = pt.tree_dot(r, z)
         alpha = jnp.where(brk, 0.0, rz / jnp.where(brk, 1.0, d))
-        x = pt.tree_axpy(alpha, p, x)
-        r = pt.tree_axpy(-alpha, ap, r)
-        z = precond(r)
-        rz_new = pt.tree_dot(r, z)
+        x, r, rr, _ = kops.fused_cg_update(x, r, p, ap, alpha)
+        if precond is not None:
+            z = precond(r)
+            rz_new = pt.tree_dot(r, z)
+        else:
+            z = r
+            rz_new = rr
         beta = rz_new / jnp.where(rz == 0.0, 1.0, rz)
-        p = pt.tree_axpy(beta, p, z)
-        rnorm = pt.tree_norm(r)
+        p, _, _ = kops.fused_deflate_direction(z, p, beta)
+        rnorm = jnp.sqrt(rr)
         if trace is not None:
             trace = trace.at[j + 1].set(rnorm)
-        return (j + 1, x, r, z, p, rnorm, trace, brk)
+        return (j + 1, x, r, z, p, rz_new, rnorm, trace, brk)
 
-    state = (jnp.int32(0), x0, r0, z0, p0, rnorm0, trace0, jnp.bool_(False))
-    j, x, r, _, _, rnorm, trace, brk = jax.lax.while_loop(cond, body, state)
-    del r, rz0
+    state = (
+        jnp.int32(0), x_flat, r0, z0, p0, rz0, rnorm0, trace0,
+        jnp.bool_(False),
+    )
+    j, x, _, _, _, _, rnorm, trace, brk = jax.lax.while_loop(
+        cond, body, state
+    )
     info = SolveInfo(
         iterations=j,
         converged=rnorm <= threshold,
@@ -144,7 +174,7 @@ def cg(
         residual_norms=trace,
         breakdown=brk,
     )
-    return CGResult(x=x, info=info)
+    return CGResult(x=unravel(x), info=info)
 
 
 # ---------------------------------------------------------------------------
@@ -200,22 +230,47 @@ def defcg(
          matvec instead of the ``r0 = r − AW c`` shortcut, keeping CG's
          convergence target exact while the deflation is approximate.
 
+    Internals: the whole solve — setup (Wᵀ A W factorization, deflated
+    initial guess) and iteration — runs on the flat engine: the vector
+    packs to a contiguous ``(n,)`` array and the deflation basis to a 2-D
+    ``(k, n)`` array, so ``(AW)ᵀ r`` fuses into the residual-update pass
+    and ``W μ`` into the direction pass.  The
+    iteration is split in two phases: a fixed-length ``lax.scan`` over the
+    first ``ell`` steps whose stacked outputs *are* the ``(P, AP)`` record
+    (each row is written exactly once — no ring buffer is carried through
+    loop state, which XLA would copy wholesale on every masked row write),
+    then a buffer-free ``while_loop`` for the remaining iterations.  Steps
+    after convergence inside the scan window are frozen — the matvec is
+    skipped via ``lax.cond``, the cheap vector passes run as masked
+    no-ops, zero rows are recorded — so the two-phase split is
+    semantically identical to one guarded loop.
+
     Returns ``CGResult`` whose ``recycle`` field feeds
     :func:`repro.core.recycle.harmonic_ritz`.
     """
-    if x0 is None:
-        x0 = pt.tree_zeros_like(b)
-
-    threshold, _ = _tolerances(b, tol, atol)
+    b_flat, unravel = pt.ravel_vector(b)
+    threshold, _ = _tolerances(b_flat, tol, atol)
     matvecs = jnp.int32(0)
 
+    A_flat = _flat_operator(A, unravel)
+    x_flat = (
+        jnp.zeros_like(b_flat) if x0 is None else pt.ravel(x0)
+    )
+
     deflating = W is not None
+    w_flat = aw_flat = waw_inv = None
     if deflating:
+        # Setup runs in flat space as well (not just the loop), so the
+        # whole solve is structure-blind: any pytree layout of the same
+        # coordinates produces bit-identical iterates.
         k = pt.basis_size(W)
+        w_flat = pt.ravel_basis(W)
         if AW is None:
-            AW = pt.basis_map_vectors(A, W)
+            aw_flat = jax.vmap(A_flat)(w_flat)
             matvecs = matvecs + k
-        waw = pt.gram(W, AW)
+        else:
+            aw_flat = pt.ravel_basis(AW)
+        waw = pt.gram(w_flat, aw_flat)
         waw = 0.5 * (waw + waw.T)
         if waw_jitter:
             waw = waw + waw_jitter * (jnp.trace(waw) / k) * jnp.eye(
@@ -223,22 +278,28 @@ def defcg(
             )
         waw_cho = cho_factor(waw)
 
-        r_init = pt.tree_sub(b, A(x0))
+        r_init = b_flat - A_flat(x_flat)
         matvecs = matvecs + 1
-        x0, r0 = deflated_initial_guess(x0, r_init, W, AW, waw_cho)
+        x_flat, r_flat = deflated_initial_guess(
+            x_flat, r_init, w_flat, aw_flat, waw_cho
+        )
         if not exact_aw:
-            r0 = pt.tree_sub(b, A(x0))
+            r_flat = b_flat - A_flat(x_flat)
             matvecs = matvecs + 1
 
-        mu0 = cho_solve(waw_cho, pt.basis_dot(AW, r0))
-        p0 = pt.tree_sub(r0, pt.basis_combine(W, mu0))
+        mu0 = cho_solve(waw_cho, pt.basis_dot(aw_flat, r_flat))
+        p_flat = r_flat - pt.basis_combine(w_flat, mu0)
+        # In-loop μ solves become one k×k GEMV: (WᵀAW)⁻¹ is formed once
+        # from the (jittered, equilibrated) Cholesky — numerically benign
+        # at these sizes, and it keeps LAPACK dispatches out of the loop.
+        waw_inv = cho_solve(waw_cho, jnp.eye(k, dtype=waw.dtype))
     else:
-        r0 = pt.tree_sub(b, A(x0))
+        r_flat = b_flat - A_flat(x_flat)
         matvecs = matvecs + 1
-        p0 = r0
+        p_flat = r_flat
 
-    rnorm0 = pt.tree_norm(r0)
-    rs0 = pt.tree_dot(r0, r0)
+    rnorm0 = pt.tree_norm(r_flat)
+    rs0 = pt.tree_dot(r_flat, r_flat)
 
     if record_residuals:
         trace0 = jnp.full((maxiter + 1,), jnp.nan, dtype=rnorm0.dtype)
@@ -246,78 +307,86 @@ def defcg(
     else:
         trace0 = None
 
-    if ell > 0:
-        p_buf0 = pt.basis_zeros(b, ell)
-        ap_buf0 = pt.basis_zeros(b, ell)
-    else:
-        p_buf0 = ap_buf0 = None
+    diverged_at = 1e8 * jnp.maximum(rnorm0, pt.tree_norm(b_flat))
 
-    diverged_at = 1e8 * jnp.maximum(rnorm0, pt.tree_norm(b))
-
-    def cond(state):
-        j = state[0]
-        rnorm = state[5]
-        brk = state[8]
+    def active_fn(j, rnorm, brk):
         keep_going = (rnorm > threshold) | (j < min_iters)
         return (j < maxiter) & keep_going & (~brk)
 
-    def body(state):
-        j, x, r, p, rs, rnorm, trace, bufs, brk = state
-        ap = A(p)
+    def step(state, active, gate_matvec):
+        """One def-CG iteration; ``active=False`` freezes the state.
+
+        The scan phase runs a fixed step count, so steps after
+        convergence are frozen: the matvec is gated behind a ``cond``
+        (``gate_matvec`` — skipping the expensive operator outright),
+        while the cheap fused vector passes are masked via ``alpha = 0``
+        and a frozen ``p`` — wrapping the *whole* body in a ``cond``
+        measured slower on active steps (branch-boundary state copies)
+        than letting the no-op passes run.
+        """
+        j, x, r, p, rs, rnorm, trace, brk = state
+        if gate_matvec:
+            ap = jax.lax.cond(active, A_flat, jnp.zeros_like, p)
+        else:
+            ap = A_flat(p)
         d = pt.tree_dot(p, ap)
-        brk = (d <= 0.0) | (~jnp.isfinite(d)) | (rnorm > diverged_at)
-        alpha = jnp.where(brk, 0.0, rs / jnp.where(brk, 1.0, d))
+        bad = (d <= 0.0) | (~jnp.isfinite(d)) | (rnorm > diverged_at)
+        brk = brk | (active & bad)
+        alpha = jnp.where(bad | (~active), 0.0, rs / jnp.where(bad, 1.0, d))
 
-        if bufs is not None:
-            p_buf, ap_buf = bufs
-            idx = jnp.minimum(j, ell - 1)
-            write = j < ell
-            p_sel = jax.tree_util.tree_map(
-                lambda new, old: jnp.where(write, new, old),
-                p,
-                pt.basis_vector(p_buf, idx),
+        mu = None
+        if deflating:
+            x, r, rs_new, awr = kops.fused_cg_update(
+                x, r, p, ap, alpha, aw_flat
             )
-            ap_sel = jax.tree_util.tree_map(
-                lambda new, old: jnp.where(write, new, old),
-                ap,
-                pt.basis_vector(ap_buf, idx),
-            )
-            p_buf = pt.basis_set(p_buf, p_sel, idx)
-            ap_buf = pt.basis_set(ap_buf, ap_sel, idx)
-            bufs = (p_buf, ap_buf)
-
-        x = pt.tree_axpy(alpha, p, x)
-        r = pt.tree_axpy(-alpha, ap, r)
-        rs_new = pt.tree_dot(r, r)
+            mu = waw_inv @ awr.astype(waw_inv.dtype)
+        else:
+            x, r, rs_new, _ = kops.fused_cg_update(x, r, p, ap, alpha)
         beta = rs_new / jnp.where(rs == 0.0, 1.0, rs)
 
-        if deflating:
-            mu = cho_solve(waw_cho, pt.basis_dot(AW, r))
-            p = pt.tree_axpy(
-                beta, p, pt.tree_sub(r, pt.basis_combine(W, mu))
-            )
-        else:
-            p = pt.tree_axpy(beta, p, r)
+        p_new, _, _ = kops.fused_deflate_direction(r, p, beta, w_flat, mu)
+        p = jnp.where(active, p_new, p)
 
         rnorm = jnp.sqrt(rs_new)
         if trace is not None:
-            trace = trace.at[j + 1].set(rnorm)
-        return (j + 1, x, r, p, rs_new, rnorm, trace, bufs, brk)
+            # Frozen steps rewrite slot j+1 with its old value, keeping
+            # the NaN tail of the trace untouched.
+            old = trace[j + 1]
+            trace = trace.at[j + 1].set(jnp.where(active, rnorm, old))
+        j = j + active.astype(j.dtype)
+        return (j, x, r, p, rs_new, rnorm, trace, brk), ap
 
     state = (
-        jnp.int32(0),
-        x0,
-        r0,
-        p0,
-        rs0,
-        rnorm0,
-        trace0,
-        (p_buf0, ap_buf0) if ell > 0 else None,
+        jnp.int32(0), x_flat, r_flat, p_flat, rs0, rnorm0, trace0,
         jnp.bool_(False),
     )
-    j, x, _, _, _, rnorm, trace, bufs, brk = jax.lax.while_loop(
-        cond, body, state
-    )
+
+    p_rows = ap_rows = None
+    if ell > 0:
+        # Recording phase: exactly ell scan steps whose stacked outputs are
+        # the (P, AP) record — each row is written once by the scan, so no
+        # (ell, n) buffer rides through loop state (XLA copies loop-carried
+        # buffers on masked dynamic row writes; scan outputs it writes in
+        # place).  Post-convergence steps contribute zero rows, matching
+        # the untouched tail of the seed's ring buffer.
+        def scan_body(state, _):
+            active = active_fn(state[0], state[5], state[7])
+            p_row = jnp.where(active, state[3], 0.0)
+            state, ap = step(state, active, gate_matvec=True)
+            ap_row = jnp.where(active, ap, 0.0)
+            return state, (p_row, ap_row)
+
+        state, (p_rows, ap_rows) = jax.lax.scan(
+            scan_body, state, None, length=ell
+        )
+
+    def cond(state):
+        return active_fn(state[0], state[5], state[7])
+
+    def body(state):
+        return step(state, jnp.bool_(True), gate_matvec=False)[0]
+
+    j, x, _, _, _, rnorm, trace, brk = jax.lax.while_loop(cond, body, state)
 
     info = SolveInfo(
         iterations=j,
@@ -329,9 +398,12 @@ def defcg(
     )
     recycle = None
     if ell > 0:
-        p_buf, ap_buf = bufs
-        recycle = RecycleData(P=p_buf, AP=ap_buf, stored=jnp.minimum(j, ell))
-    return CGResult(x=x, info=info, recycle=recycle)
+        recycle = RecycleData(
+            P=pt.unravel_basis(p_rows, unravel),
+            AP=pt.unravel_basis(ap_rows, unravel),
+            stored=jnp.minimum(j, ell),
+        )
+    return CGResult(x=unravel(x), info=info, recycle=recycle)
 
 
 # ---------------------------------------------------------------------------

@@ -6,6 +6,22 @@ with impl dispatch (pallas | interpret | reference | chunked | auto).
 """
 
 from repro.kernels import ops, ref
-from repro.kernels.ops import attention, rbf_matvec, ssd, ssd_decode_step
+from repro.kernels.ops import (
+    attention,
+    fused_cg_update,
+    fused_deflate_direction,
+    rbf_matvec,
+    ssd,
+    ssd_decode_step,
+)
 
-__all__ = ["ops", "ref", "attention", "rbf_matvec", "ssd", "ssd_decode_step"]
+__all__ = [
+    "ops",
+    "ref",
+    "attention",
+    "fused_cg_update",
+    "fused_deflate_direction",
+    "rbf_matvec",
+    "ssd",
+    "ssd_decode_step",
+]

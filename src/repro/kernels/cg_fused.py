@@ -1,0 +1,364 @@
+"""Fused CG/def-CG iteration updates — the solver's non-matvec hot path.
+
+One def-CG iteration on flat ``(n,)`` state does, besides the matvec:
+
+    x  += α p                    r  -= α ap
+    rr  = rᵀr                    awr = (AW)ᵀ r          (deflation GEMV)
+    p   = β p + r − W μ          P[idx], AP[idx] = p, ap (recording)
+
+Issued as separate ops these are ~8 HBM passes over n-sized data; in the
+memory-bound regime the paper targets (cheap matvec, large n) they dominate
+the iteration.  This module fuses them into two passes (DESIGN.md §8):
+
+* :func:`fused_cg_update_pallas` — ``x/r`` AXPYs plus *both* reductions
+  (``rᵀr`` and ``(AW)ᵀr``) in one read of ``x, r, p, ap, AW``;
+* :func:`fused_deflate_direction_pallas` — the deflated direction update
+  ``p ← βp + r − Wμ`` plus the guarded ring-buffer write of ``(p, Ap)``
+  (a dynamic output row selected by scalar-prefetched ``idx``, buffers
+  aliased in/out so untouched rows never move).
+
+Layout: a flat vector of length n is viewed as ``(n/128, 128)`` and the
+grid walks row-blocks; bases ``(k, n)`` become ``(k, n/128, 128)`` with the
+k axis resident per block.  Scalars (α, β, μ) ride in SMEM; the reductions
+accumulate in SMEM across the sequential grid.
+
+The ``chunked`` twins are the pure-jnp same-math forms.  They deliberately
+have *no* scan blocking: all operands are O(n), nothing materializes, and a
+single jnp expression lets XLA fuse each group into one loop — that is the
+CPU/GPU fast path the solver uses off-TPU.
+
+Per the repo kernel contract: oracles live in ``ref.py``, dispatch in
+``ops.py`` (pallas | interpret | reference | chunked | auto).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.tpu_compat import CompilerParams
+
+_LANES = 128
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _acc(dtype):
+    """Accumulation dtype (mirrors core.pytree): f64 stays, else ≥ f32."""
+    if dtype == jnp.float64:
+        return jnp.float64
+    return jnp.promote_types(dtype, jnp.float32)
+
+
+def _pad_rows(v: jnp.ndarray, n_pad: int) -> jnp.ndarray:
+    """(n,) → (n_pad/128, 128), zero-padded (identity when n == n_pad)."""
+    n = v.shape[-1]
+    if v.ndim == 1:
+        return jnp.pad(v, (0, n_pad - n)).reshape(-1, _LANES)
+    return jnp.pad(v, ((0, 0), (0, n_pad - n))).reshape(
+        v.shape[0], -1, _LANES
+    )
+
+
+# ---------------------------------------------------------------------------
+# fused_cg_update: x += αp, r −= αap, rr = rᵀr, awr = AW·r — one pass
+# ---------------------------------------------------------------------------
+
+
+def _cg_update_kernel(
+    alpha_ref, x_ref, r_ref, p_ref, ap_ref, xo_ref, ro_ref, rr_ref
+):
+    i = pl.program_id(0)
+    alpha = alpha_ref[0, 0]
+    rn = r_ref[...].astype(jnp.float32) - alpha * ap_ref[...].astype(
+        jnp.float32
+    )
+    xo_ref[...] = (
+        x_ref[...].astype(jnp.float32) + alpha * p_ref[...].astype(jnp.float32)
+    ).astype(xo_ref.dtype)
+    ro_ref[...] = rn.astype(ro_ref.dtype)
+
+    @pl.when(i == 0)
+    def _init():
+        rr_ref[0, 0] = jnp.float32(0.0)
+
+    rr_ref[0, 0] += jnp.sum(rn * rn)
+
+
+def _cg_update_aw_kernel(
+    alpha_ref, x_ref, r_ref, p_ref, ap_ref, aw_ref,
+    xo_ref, ro_ref, rr_ref, awr_ref, *, k,
+):
+    i = pl.program_id(0)
+    alpha = alpha_ref[0, 0]
+    rn = r_ref[...].astype(jnp.float32) - alpha * ap_ref[...].astype(
+        jnp.float32
+    )
+    xo_ref[...] = (
+        x_ref[...].astype(jnp.float32) + alpha * p_ref[...].astype(jnp.float32)
+    ).astype(xo_ref.dtype)
+    ro_ref[...] = rn.astype(ro_ref.dtype)
+
+    @pl.when(i == 0)
+    def _init():
+        rr_ref[0, 0] = jnp.float32(0.0)
+        for ki in range(k):
+            awr_ref[ki, 0] = jnp.float32(0.0)
+
+    rr_ref[0, 0] += jnp.sum(rn * rn)
+    awv = aw_ref[...].astype(jnp.float32)  # (k, rows, lanes)
+    for ki in range(k):
+        awr_ref[ki, 0] += jnp.sum(awv[ki] * rn)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def fused_cg_update_pallas(
+    x: jnp.ndarray,
+    r: jnp.ndarray,
+    p: jnp.ndarray,
+    ap: jnp.ndarray,
+    alpha,
+    aw: Optional[jnp.ndarray] = None,
+    *,
+    block: int = 4096,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, Optional[jnp.ndarray]]:
+    """One-pass CG state update over flat vectors (f32 accumulation).
+
+    Returns ``(x + α·p, r − α·ap, ‖r_new‖², AW @ r_new | None)``.
+
+    Shapes are padded to the (rows·128) tile internally; padded tails are
+    zero so both reductions are exact, and outputs are sliced back to n.
+    The pads are identity when n is already tile-aligned (the usual case
+    for model shapes) — on TPU, misaligned n pays a pad/slice per call,
+    so prefer aligned problem sizes (or a smaller ``block``) there.
+    """
+    n = x.shape[0]
+    rows = max(8, block // _LANES)
+    n_pad = _round_up(n, _LANES * rows)
+    nrows = n_pad // _LANES
+    grid = (nrows // rows,)
+
+    x2, r2, p2, ap2 = (_pad_rows(v, n_pad) for v in (x, r, p, ap))
+    alpha2 = jnp.asarray(alpha, jnp.float32).reshape(1, 1)
+
+    vec_spec = pl.BlockSpec((rows, _LANES), lambda i: (i, 0))
+    smem = functools.partial(pl.BlockSpec, memory_space=pltpu.SMEM)
+    in_specs = [smem((1, 1), lambda i: (0, 0))] + [vec_spec] * 4
+    out_specs = [
+        vec_spec,
+        vec_spec,
+        smem((1, 1), lambda i: (0, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((nrows, _LANES), x.dtype),
+        jax.ShapeDtypeStruct((nrows, _LANES), r.dtype),
+        jax.ShapeDtypeStruct((1, 1), jnp.float32),
+    ]
+    args = [alpha2, x2, r2, p2, ap2]
+
+    if aw is not None:
+        k = aw.shape[0]
+        args.append(_pad_rows(aw, n_pad))
+        in_specs.append(
+            pl.BlockSpec((k, rows, _LANES), lambda i: (0, i, 0))
+        )
+        out_specs.append(smem((k, 1), lambda i: (0, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((k, 1), jnp.float32))
+        kernel = functools.partial(_cg_update_aw_kernel, k=k)
+    else:
+        kernel = _cg_update_kernel
+
+    outs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        compiler_params=CompilerParams(dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+        name="fused_cg_update",
+    )(*args)
+
+    x_new = outs[0].reshape(n_pad)[:n]
+    r_new = outs[1].reshape(n_pad)[:n]
+    # Reductions accumulate in f32 on the TPU but are returned in the
+    # accumulation dtype of the inputs, so solver loop carries keep a
+    # consistent dtype across the pallas and chunked paths (x64 mode).
+    rr = outs[2][0, 0].astype(_acc(r.dtype))
+    awr = outs[3][:, 0].astype(_acc(r.dtype)) if aw is not None else None
+    return x_new, r_new, rr, awr
+
+
+def fused_cg_update_chunked(x, r, p, ap, alpha, aw=None):
+    """Pure-jnp twin: same math, one fused XLA loop per output group."""
+    acc = _acc(r.dtype)
+    x_new = x + alpha * p
+    r_new = r - alpha * ap
+    ra = r_new.astype(acc)
+    rr = jnp.sum(ra * ra)
+    awr = aw.astype(acc) @ ra if aw is not None else None
+    return x_new, r_new, rr, awr
+
+
+# ---------------------------------------------------------------------------
+# fused_deflate_direction: p ← βp + r − Wμ, plus the (p, Ap) buffer write
+# ---------------------------------------------------------------------------
+
+
+def _deflate_buf_kernel(
+    idx_ref, beta_ref, mu_ref, r_ref, p_ref, ap_ref, w_ref,
+    pbi_ref, abi_ref, po_ref, pbo_ref, abo_ref, *, k,
+):
+    del idx_ref, pbi_ref, abi_ref  # routing only (index maps / aliasing)
+    pv = p_ref[...].astype(jnp.float32)
+    acc = r_ref[...].astype(jnp.float32) + beta_ref[0, 0] * pv
+    for ki in range(k):
+        acc -= mu_ref[ki, 0] * w_ref[ki].astype(jnp.float32)
+    po_ref[...] = acc.astype(po_ref.dtype)
+    pbo_ref[0] = p_ref[...].astype(pbo_ref.dtype)
+    abo_ref[0] = ap_ref[...].astype(abo_ref.dtype)
+
+
+def _deflate_kernel(beta_ref, mu_ref, r_ref, p_ref, w_ref, po_ref, *, k):
+    pv = p_ref[...].astype(jnp.float32)
+    acc = r_ref[...].astype(jnp.float32) + beta_ref[0, 0] * pv
+    for ki in range(k):
+        acc -= mu_ref[ki, 0] * w_ref[ki].astype(jnp.float32)
+    po_ref[...] = acc.astype(po_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def fused_deflate_direction_pallas(
+    r: jnp.ndarray,
+    p: jnp.ndarray,
+    beta,
+    w: jnp.ndarray,
+    mu: jnp.ndarray,
+    ap: Optional[jnp.ndarray] = None,
+    idx=None,
+    p_buf: Optional[jnp.ndarray] = None,
+    ap_buf: Optional[jnp.ndarray] = None,
+    *,
+    block: int = 4096,
+    interpret: bool = False,
+):
+    """Deflated direction update, optionally recording ``(p, ap)``.
+
+    ``p_new = β·p + r − μᵀW``; when ``p_buf``/``ap_buf`` are given, the
+    *incoming* ``p`` and ``ap`` are stored into buffer row ``idx`` in the
+    same pass — callers guard the write by pointing ``idx`` at a spare
+    row.  The buffers are aliased through the kernel (donated), so only
+    the selected row moves; returns ``(p_new, p_buf, ap_buf)``.
+    """
+    n = r.shape[0]
+    k = w.shape[0]
+    rows = max(8, block // _LANES)
+    n_pad = _round_up(n, _LANES * rows)
+    nrows = n_pad // _LANES
+    grid = (nrows // rows,)
+
+    r2, p2 = _pad_rows(r, n_pad), _pad_rows(p, n_pad)
+    w2 = _pad_rows(w, n_pad)
+    beta2 = jnp.asarray(beta, jnp.float32).reshape(1, 1)
+    mu2 = jnp.asarray(mu, jnp.float32).reshape(k, 1)
+
+    have_buf = p_buf is not None
+    smem = functools.partial(pl.BlockSpec, memory_space=pltpu.SMEM)
+
+    if not have_buf:
+        out = pl.pallas_call(
+            functools.partial(_deflate_kernel, k=k),
+            grid=grid,
+            in_specs=[
+                smem((1, 1), lambda i: (0, 0)),
+                smem((k, 1), lambda i: (0, 0)),
+                pl.BlockSpec((rows, _LANES), lambda i: (i, 0)),
+                pl.BlockSpec((rows, _LANES), lambda i: (i, 0)),
+                pl.BlockSpec((k, rows, _LANES), lambda i: (0, i, 0)),
+            ],
+            out_specs=pl.BlockSpec((rows, _LANES), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((nrows, _LANES), p.dtype),
+            compiler_params=CompilerParams(
+                dimension_semantics=("arbitrary",)
+            ),
+            interpret=interpret,
+            name="fused_deflate_direction",
+        )(beta2, mu2, r2, p2, w2)
+        return out.reshape(n_pad)[:n], None, None
+
+    m = p_buf.shape[0]
+    ap2 = _pad_rows(ap, n_pad)
+    pb2, ab2 = _pad_rows(p_buf, n_pad), _pad_rows(ap_buf, n_pad)
+    idx2 = jnp.asarray(idx, jnp.int32).reshape(1)
+
+    vec = lambda: pl.BlockSpec((rows, _LANES), lambda i, idx_ref: (i, 0))
+    row = lambda: pl.BlockSpec(
+        (1, rows, _LANES), lambda i, idx_ref: (idx_ref[0], i, 0)
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            smem((1, 1), lambda i, idx_ref: (0, 0)),  # beta
+            smem((k, 1), lambda i, idx_ref: (0, 0)),  # mu
+            vec(),  # r
+            vec(),  # p
+            vec(),  # ap
+            pl.BlockSpec(
+                (k, rows, _LANES), lambda i, idx_ref: (0, i, 0)
+            ),  # w
+            row(),  # p_buf (pass-through for aliasing)
+            row(),  # ap_buf
+        ],
+        out_specs=[vec(), row(), row()],
+    )
+    # Alias the buffers in→out (inputs count the scalar-prefetch arg).
+    outs = pl.pallas_call(
+        functools.partial(_deflate_buf_kernel, k=k),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((nrows, _LANES), p.dtype),
+            jax.ShapeDtypeStruct((m, nrows, _LANES), p_buf.dtype),
+            jax.ShapeDtypeStruct((m, nrows, _LANES), ap_buf.dtype),
+        ],
+        input_output_aliases={7: 1, 8: 2},
+        compiler_params=CompilerParams(dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+        name="fused_deflate_direction",
+    )(idx2, beta2, mu2, r2, p2, ap2, w2, pb2, ab2)
+    p_new = outs[0].reshape(n_pad)[:n]
+    p_buf_new = outs[1].reshape(m, n_pad)[:, :n]
+    ap_buf_new = outs[2].reshape(m, n_pad)[:, :n]
+    return p_new, p_buf_new, ap_buf_new
+
+
+def fused_deflate_direction_chunked(
+    r, p, beta, w=None, mu=None, ap=None, idx=None, p_buf=None, ap_buf=None
+):
+    """Pure-jnp twin.  The buffer update is a single masked
+    ``dynamic_update_slice`` (no read-modify-write of the old row); inside
+    a ``while_loop`` the buffers are donated, so only row ``idx`` moves."""
+    p_new = beta * p + r
+    if w is not None:
+        p_new = p_new - (
+            mu.astype(_acc(w.dtype)) @ w.astype(_acc(w.dtype))
+        ).astype(p.dtype)
+    if p_buf is None:
+        return p_new, None, None
+    i = jnp.asarray(idx, jnp.int32)
+    zero = jnp.int32(0)
+    p_buf = jax.lax.dynamic_update_slice(
+        p_buf, p[None].astype(p_buf.dtype), (i, zero)
+    )
+    ap_buf = jax.lax.dynamic_update_slice(
+        ap_buf, ap[None].astype(ap_buf.dtype), (i, zero)
+    )
+    return p_new, p_buf, ap_buf

@@ -26,6 +26,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.cg_fused import (
+    fused_cg_update_chunked,
+    fused_cg_update_pallas,
+    fused_deflate_direction_chunked,
+    fused_deflate_direction_pallas,
+)
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.rbf_matvec import rbf_matvec_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
@@ -98,6 +104,82 @@ def _rbf_matvec_chunked(xs: jnp.ndarray, vs: jnp.ndarray, block: int):
 
     _, ys = jax.lax.scan(body, None, xp.reshape(-1, nb, d))
     return ys.reshape(n_pad, vs.shape[1])[:n]
+
+
+# ---------------------------------------------------------------------------
+# Fused CG iteration updates (the def-CG inner-loop hot path)
+# ---------------------------------------------------------------------------
+
+
+def fused_cg_update(
+    x: jnp.ndarray,
+    r: jnp.ndarray,
+    p: jnp.ndarray,
+    ap: jnp.ndarray,
+    alpha,
+    aw: Optional[jnp.ndarray] = None,
+    *,
+    impl: str = "auto",
+    block: int = 4096,
+):
+    """``(x + α p, r − α ap, ‖r_new‖², AW @ r_new | None)`` in one pass.
+
+    The CG state update fused with both per-iteration reductions — the
+    ``rᵀr`` recurrence scalar and the deflation GEMV ``(AW)ᵀ r`` (``aw``
+    is the flat ``(k, n)`` basis; pass ``None`` when not deflating).
+    """
+    impl = _resolve(impl)
+    if impl in ("pallas", "interpret"):
+        return fused_cg_update_pallas(
+            x, r, p, ap, alpha, aw,
+            block=block, interpret=(impl == "interpret"),
+        )
+    if impl == "reference":
+        return ref.fused_cg_update(x, r, p, ap, alpha, aw)
+    if impl == "chunked":
+        return fused_cg_update_chunked(x, r, p, ap, alpha, aw)
+    raise ValueError(f"unknown impl={impl!r}")
+
+
+def fused_deflate_direction(
+    r: jnp.ndarray,
+    p: jnp.ndarray,
+    beta,
+    w: Optional[jnp.ndarray] = None,
+    mu: Optional[jnp.ndarray] = None,
+    ap: Optional[jnp.ndarray] = None,
+    idx=None,
+    p_buf: Optional[jnp.ndarray] = None,
+    ap_buf: Optional[jnp.ndarray] = None,
+    *,
+    impl: str = "auto",
+    block: int = 4096,
+):
+    """``p ← β p + r − μᵀ W`` fused with the guarded ring-buffer write.
+
+    When ``p_buf``/``ap_buf`` are given the *incoming* ``(p, ap)`` is
+    stored into row ``idx`` in the same pass (callers point ``idx`` at a
+    spare row to suppress the write).  Returns ``(p_new, p_buf, ap_buf)``.
+
+    The Pallas kernel serves the deflating combos; the plain-CG direction
+    update (``w is None``) is two-operand elementwise work that XLA
+    already fuses optimally, so it lowers to the chunked form everywhere.
+    """
+    impl = _resolve(impl)
+    if impl in ("pallas", "interpret") and w is not None:
+        return fused_deflate_direction_pallas(
+            r, p, beta, w, mu, ap, idx, p_buf, ap_buf,
+            block=block, interpret=(impl == "interpret"),
+        )
+    if impl == "reference":
+        return ref.fused_deflate_direction(
+            r, p, beta, w, mu, ap, idx, p_buf, ap_buf
+        )
+    if impl in ("chunked", "pallas", "interpret"):
+        return fused_deflate_direction_chunked(
+            r, p, beta, w, mu, ap, idx, p_buf, ap_buf
+        )
+    raise ValueError(f"unknown impl={impl!r}")
 
 
 # ---------------------------------------------------------------------------

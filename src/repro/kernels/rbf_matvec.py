@@ -35,6 +35,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.tpu_compat import CompilerParams
+
 
 def _rbf_matvec_kernel(x_i_ref, x_j_ref, v_ref, o_ref, acc_ref):
     """One (bm × bn) tile of y += exp(−‖xi−xj‖²/2) @ v."""
@@ -117,7 +119,7 @@ def rbf_matvec_pallas(
         out_specs=pl.BlockSpec((bm, r_pad), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n_pad, r_pad), v_scaled.dtype),
         scratch_shapes=[pltpu.VMEM((bm, r_pad), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

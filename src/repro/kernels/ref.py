@@ -37,6 +37,43 @@ def rbf_matvec(
 
 
 # ---------------------------------------------------------------------------
+# Fused CG iteration updates — oracles for cg_fused
+# ---------------------------------------------------------------------------
+
+
+def fused_cg_update(x, r, p, ap, alpha, aw=None):
+    """Semantic definition of the fused CG state update.
+
+    Returns ``(x + α p, r − α ap, ‖r_new‖², AW @ r_new | None)`` — the
+    four quantities one def-CG iteration needs after the matvec.
+    """
+    x_new = x + alpha * p
+    r_new = r - alpha * ap
+    rr = jnp.vdot(r_new, r_new)
+    awr = aw @ r_new if aw is not None else None
+    return x_new, r_new, rr, awr
+
+
+def fused_deflate_direction(
+    r, p, beta, w=None, mu=None, ap=None, idx=None, p_buf=None, ap_buf=None
+):
+    """Semantic definition of the fused direction update + recording.
+
+    ``p_new = β p + r − μᵀ W``; when buffers are given, the *incoming*
+    ``(p, ap)`` pair is stored into row ``idx`` (callers guard the write
+    by pointing ``idx`` at a spare row).  Returns ``(p_new, p_buf,
+    ap_buf)``.
+    """
+    p_new = beta * p + r
+    if w is not None:
+        p_new = p_new - mu @ w
+    if p_buf is not None:
+        p_buf = p_buf.at[idx].set(p)
+        ap_buf = ap_buf.at[idx].set(ap)
+    return p_new, p_buf, ap_buf
+
+
+# ---------------------------------------------------------------------------
 # Attention (GQA, optional causal) — oracle for flash_attention
 # ---------------------------------------------------------------------------
 

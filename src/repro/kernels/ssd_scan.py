@@ -35,6 +35,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.tpu_compat import CompilerParams
+
 
 def _ssd_kernel(x_ref, dt_ref, adt_ref, b_ref, c_ref, y_ref, h_ref):
     ci = pl.program_id(2)
@@ -128,7 +130,7 @@ def ssd_scan_pallas(
         out_specs=pl.BlockSpec((1, 1, c, p), lambda bi, hi, ci: (bi, hi, ci, 0)),
         out_shape=jax.ShapeDtypeStruct((b, h, l_p, p), x.dtype),
         scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,0 +1,17 @@
+"""Version shims for the Pallas TPU API surface.
+
+The compiler-params dataclass was renamed ``TPUCompilerParams`` →
+``CompilerParams`` across JAX releases; resolve whichever this JAX ships
+so the kernels import cleanly on both sides of the rename.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
+)
+
+if CompilerParams is None:  # pragma: no cover - very old/new jax
+    raise ImportError("no Pallas TPU CompilerParams class found in this jax")

@@ -211,12 +211,19 @@ def analyze(hlo: str) -> dict:
             rshape = c.symtab.get(iname, "")
 
             if op == "dot":
-                lhs_m = re.search(r"\(%([\w\.\-]+)", rest)
+                # lhs operand: newer XLA prints the shape inline
+                # (``dot(f32[64,64]{1,0} %x, ...)``); older text has only
+                # ``%x`` and needs the symbol-table lookup.
                 cd_m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rest)
+                args_m = re.search(r"\(([^)]*)\)", rest)
+                lhs_text = args_m.group(1).split(", ")[0] if args_m else ""
+                dims = _shape_dims(lhs_text)
+                if not dims:
+                    ref = _OPERANDS_RE.search(lhs_text)
+                    if ref:
+                        dims = _shape_dims(c.symtab.get(ref.group(1), ""))
                 contract = 1
-                if lhs_m and cd_m:
-                    lhs_shape = c.symtab.get(lhs_m.group(1), "")
-                    dims = _shape_dims(lhs_shape)
+                if cd_m:
                     for idx in cd_m.group(1).split(","):
                         if idx and int(idx) < len(dims):
                             contract *= dims[int(idx)]

@@ -4,20 +4,74 @@ x64 is enabled globally for the test session: solver correctness tests
 need double precision, and all model code passes explicit dtypes so this
 does not perturb the (bf16/f32) smoke tests.  Device count stays 1 — only
 `repro/launch/dryrun.py` (a separate process) requests 512 host devices.
+
+``hypothesis`` is optional: CI boxes without it still collect and run the
+full deterministic suite — a stub module is installed so the
+``from hypothesis import given, ...`` imports in test files resolve, and
+every ``@given``-decorated property test is skipped.
 """
 
-import hypothesis
+import sys
+import types
+
 import jax
 import numpy as np
 import pytest
 
+try:
+    import hypothesis
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    def _given(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+        return deco
+
+    def _settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    _settings.register_profile = lambda *a, **k: None
+    _settings.load_profile = lambda *a, **k: None
+
+    def _strategy(*_args, **_kwargs):
+        return None
+
+    _strategies = types.ModuleType("hypothesis.strategies")
+    for _name in (
+        "integers",
+        "floats",
+        "booleans",
+        "sampled_from",
+        "lists",
+        "text",
+        "tuples",
+        "one_of",
+        "just",
+    ):
+        setattr(_strategies, _name, _strategy)
+
+    hypothesis = types.ModuleType("hypothesis")
+    hypothesis.given = _given
+    hypothesis.settings = _settings
+    hypothesis.strategies = _strategies
+    sys.modules["hypothesis"] = hypothesis
+    sys.modules["hypothesis.strategies"] = _strategies
+
 jax.config.update("jax_enable_x64", True)
 
-# Deterministic property tests (shared CI boxes; examples replay exactly).
-hypothesis.settings.register_profile(
-    "ci", derandomize=True, deadline=None, max_examples=15
-)
-hypothesis.settings.load_profile("ci")
+if HAVE_HYPOTHESIS:
+    # Deterministic property tests (shared CI boxes; examples replay exactly).
+    hypothesis.settings.register_profile(
+        "ci", derandomize=True, deadline=None, max_examples=15
+    )
+    hypothesis.settings.load_profile("ci")
 
 
 @pytest.fixture(autouse=True, scope="module")

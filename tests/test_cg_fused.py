@@ -1,0 +1,302 @@
+"""Fused CG iteration kernels (cg_fused) + flat-engine solver equivalence.
+
+Three layers of checks:
+
+  1. oracle parity: ``fused_cg_update`` / ``fused_deflate_direction`` in
+     interpret and chunked mode vs the pure-jnp oracles in ``ref.py``, at
+     tile-aligned and non-multiple-of-block shapes (the acceptance bar);
+  2. flat-engine equivalence: ``defcg`` (flat inner loop) vs a direct
+     transcription of the seed's pytree def-CG loop, to 1e-10 on an RBF
+     GP Newton system, including the recorded ``(P, AP)`` Krylov data and
+     the harmonic-Ritz extraction it feeds;
+  3. structure invariance: the same system solved with a flat ``(n,)``
+     vector and with a dict-structured pytree must give the same numbers
+     (the pack/unpack shim is exact).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.scipy.linalg import cho_factor, cho_solve
+
+from repro.core import KernelSystemOperator, defcg, from_matrix, harmonic_ritz
+from repro.core import pytree as pt
+from repro.kernels import ops, ref
+from tests.conftest import make_spd
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# 1. oracle parity
+# ---------------------------------------------------------------------------
+
+# (n, k, block): default shape, non-multiple-of-block n, tiny n, k=1 edge
+PARITY_CASES = [
+    (4096, 8, 4096),
+    (1000, 5, 1024),
+    (130, 3, 4096),
+    (257, 1, 1024),
+]
+
+
+class TestFusedCGUpdate:
+    @pytest.mark.parametrize("impl", ["interpret", "chunked"])
+    @pytest.mark.parametrize("case", PARITY_CASES)
+    def test_matches_oracle(self, impl, case):
+        n, k, block = case
+        rng = np.random.default_rng(n + k)
+        x, r, p, ap = (
+            jnp.asarray(rng.standard_normal(n), F32) for _ in range(4)
+        )
+        aw = jnp.asarray(rng.standard_normal((k, n)), F32)
+        alpha = 0.37
+        want = ref.fused_cg_update(x, r, p, ap, alpha, aw)
+        got = ops.fused_cg_update(
+            x, r, p, ap, alpha, aw, impl=impl, block=block
+        )
+        for g, w, name in zip(got, want, ("x", "r", "rr", "awr")):
+            scale = max(1.0, float(jnp.max(jnp.abs(w))))
+            np.testing.assert_allclose(
+                np.asarray(g) / scale,
+                np.asarray(w) / scale,
+                rtol=2e-4,
+                atol=2e-4,
+                err_msg=f"{impl} {name} n={n} k={k}",
+            )
+
+    @pytest.mark.parametrize("impl", ["interpret", "chunked"])
+    def test_no_deflation_variant(self, impl):
+        rng = np.random.default_rng(3)
+        n = 513  # not a multiple of anything relevant
+        x, r, p, ap = (
+            jnp.asarray(rng.standard_normal(n), F32) for _ in range(4)
+        )
+        want = ref.fused_cg_update(x, r, p, ap, -1.25)
+        got = ops.fused_cg_update(x, r, p, ap, -1.25, impl=impl, block=1024)
+        assert got[3] is None
+        np.testing.assert_allclose(
+            np.asarray(got[1]), np.asarray(want[1]), rtol=2e-4, atol=2e-4
+        )
+        np.testing.assert_allclose(
+            float(got[2]), float(want[2]), rtol=2e-4
+        )
+
+
+class TestFusedDeflateDirection:
+    @pytest.mark.parametrize("impl", ["interpret", "chunked"])
+    @pytest.mark.parametrize("case", PARITY_CASES)
+    def test_matches_oracle_with_buffers(self, impl, case):
+        n, k, block = case
+        m = 2 * k + 1
+        rng = np.random.default_rng(n - k)
+        r, p, ap = (jnp.asarray(rng.standard_normal(n), F32) for _ in range(3))
+        w = jnp.asarray(rng.standard_normal((k, n)), F32)
+        mu = jnp.asarray(rng.standard_normal(k), F32)
+        p_buf = jnp.zeros((m, n), F32)
+        ap_buf = jnp.full((m, n), -1.0, F32)
+        idx = jnp.int32(k)  # interior row
+        want = ref.fused_deflate_direction(
+            r, p, 0.9, w, mu, ap, idx, p_buf, ap_buf
+        )
+        got = ops.fused_deflate_direction(
+            r, p, 0.9, w, mu, ap, idx, p_buf, ap_buf, impl=impl, block=block
+        )
+        for g, w_, name in zip(got, want, ("p", "p_buf", "ap_buf")):
+            np.testing.assert_allclose(
+                np.asarray(g),
+                np.asarray(w_),
+                rtol=2e-4,
+                atol=2e-4,
+                err_msg=f"{impl} {name} n={n} k={k}",
+            )
+
+    @pytest.mark.parametrize("impl", ["interpret", "chunked"])
+    def test_no_buffer_variant(self, impl):
+        rng = np.random.default_rng(9)
+        n, k = 777, 4
+        r, p = (jnp.asarray(rng.standard_normal(n), F32) for _ in range(2))
+        w = jnp.asarray(rng.standard_normal((k, n)), F32)
+        mu = jnp.asarray(rng.standard_normal(k), F32)
+        want = ref.fused_deflate_direction(r, p, 0.3, w, mu)
+        got = ops.fused_deflate_direction(
+            r, p, 0.3, w, mu, impl=impl, block=1024
+        )
+        np.testing.assert_allclose(
+            np.asarray(got[0]), np.asarray(want[0]), rtol=2e-4, atol=2e-4
+        )
+        assert got[1] is None and got[2] is None
+
+
+# ---------------------------------------------------------------------------
+# 2. flat engine vs the seed pytree loop, on an RBF GP Newton system
+# ---------------------------------------------------------------------------
+
+
+def _seed_defcg(A, b, W, AW, *, ell, tol, maxiter):
+    """Direct transcription of the seed's pytree def-CG loop (Alg. 1 with
+    ring-buffer recording) — the reference the flat engine must match."""
+    k = pt.basis_size(W)
+    waw = pt.gram(W, AW)
+    waw = 0.5 * (waw + waw.T)
+    waw_cho = cho_factor(waw)
+    waw_inv = cho_solve(waw_cho, jnp.eye(k, dtype=waw.dtype))
+
+    x = pt.tree_zeros_like(b)
+    r = pt.tree_sub(b, A(x))
+    c = cho_solve(waw_cho, pt.basis_dot(W, r))
+    x = pt.tree_add(x, pt.basis_combine(W, c))
+    r = pt.tree_sub(r, pt.basis_combine(AW, c))
+    mu = cho_solve(waw_cho, pt.basis_dot(AW, r))
+    p = pt.tree_sub(r, pt.basis_combine(W, mu))
+
+    threshold = tol * float(pt.tree_norm(b))
+    p_buf = pt.basis_zeros(b, ell)
+    ap_buf = pt.basis_zeros(b, ell)
+    rs = pt.tree_dot(r, r)
+    j = 0
+    while j < maxiter and float(pt.tree_norm(r)) > threshold:
+        ap = A(p)
+        d = pt.tree_dot(p, ap)
+        alpha = rs / d
+        if j < ell:
+            p_buf = pt.basis_set(p_buf, p, j)
+            ap_buf = pt.basis_set(ap_buf, ap, j)
+        x = pt.tree_axpy(alpha, p, x)
+        r = pt.tree_axpy(-alpha, ap, r)
+        rs_new = pt.tree_dot(r, r)
+        beta = rs_new / rs
+        mu = waw_inv @ pt.basis_dot(AW, r)
+        p = pt.tree_axpy(beta, p, pt.tree_sub(r, pt.basis_combine(W, mu)))
+        rs = rs_new
+        j += 1
+    return x, p_buf, ap_buf, j
+
+
+def _gp_newton_system(n=120, d=4, seed=0):
+    """A = I + H½ K H½ for an RBF Gram matrix — the paper's Eq. 10."""
+    rng = np.random.default_rng(seed)
+    xs = jnp.asarray(rng.standard_normal((n, d)))
+    kmat = ref.rbf_gram(xs, 1.5, 1.2)
+    sqrt_h = jnp.asarray(rng.uniform(0.05, 0.5, n))
+    a_op = KernelSystemOperator(lambda v: kmat @ v, sqrt_h)
+    b = jnp.asarray(rng.standard_normal(n))
+    return a_op, b, kmat, sqrt_h
+
+
+class TestFlatEngineEquivalence:
+    def test_matches_seed_pytree_loop_to_1e10(self):
+        n, k, ell = 120, 6, 12
+        a_op, b, _, _ = _gp_newton_system(n=n)
+        W = jnp.asarray(
+            np.linalg.qr(
+                np.random.default_rng(7).standard_normal((n, k))
+            )[0].T
+        )
+        AW = pt.basis_map_vectors(a_op, W)
+
+        want_x, want_p, want_ap, want_j = _seed_defcg(
+            a_op, b, W, AW, ell=ell, tol=1e-12, maxiter=400
+        )
+        res = defcg(a_op, b, W=W, AW=AW, ell=ell, tol=1e-12, maxiter=400)
+
+        assert int(res.info.iterations) == want_j
+        np.testing.assert_allclose(
+            np.asarray(res.x), np.asarray(want_x), rtol=1e-10, atol=1e-10
+        )
+        np.testing.assert_allclose(
+            np.asarray(res.recycle.P), np.asarray(want_p),
+            rtol=1e-10, atol=1e-10,
+        )
+        np.testing.assert_allclose(
+            np.asarray(res.recycle.AP), np.asarray(want_ap),
+            rtol=1e-10, atol=1e-10,
+        )
+        assert int(res.recycle.stored) == min(want_j, ell)
+
+        # ... and the recycled harmonic-Ritz extraction agrees too.
+        m = int(res.recycle.stored)
+        _, _, theta_flat = harmonic_ritz(
+            pt.basis_slice(res.recycle.P, m),
+            pt.basis_slice(res.recycle.AP, m),
+            k,
+        )
+        _, _, theta_seed = harmonic_ritz(
+            pt.basis_slice(want_p, m), pt.basis_slice(want_ap, m), k
+        )
+        np.testing.assert_allclose(
+            np.sort(np.asarray(theta_flat)),
+            np.sort(np.asarray(theta_seed)),
+            rtol=1e-8,
+        )
+
+    def test_structure_invariance(self):
+        """Flat (n,) and dict-pytree runs of the same system must agree."""
+        # Fixed iteration count (tol=0) so both runs execute identical
+        # steps: the inner loop is structure-blind, and the only noise is
+        # the pytree-space *setup* (gram, μ0), which reduces per leaf.
+        n, k, ell, iters = 96, 5, 10, 40
+        rng = np.random.default_rng(23)
+        amat, _, _ = make_spd(n, 1e2, rng)
+        amat = jnp.asarray(amat)
+        b = jnp.asarray(rng.standard_normal(n))
+        wq = jnp.asarray(np.linalg.qr(rng.standard_normal((n, k)))[0].T)
+
+        flat = defcg(
+            from_matrix(amat), b, W=wq, ell=ell, tol=0.0, maxiter=iters
+        )
+
+        h = n // 2
+
+        def tree_matvec(tree):
+            v = jnp.concatenate([tree["a"].ravel(), tree["b"]])
+            out = amat @ v
+            return {"a": out[:h].reshape(2, -1), "b": out[h:]}
+
+        b_tree = {"a": b[:h].reshape(2, -1), "b": b[h:]}
+        w_tree = {"a": wq[:, :h].reshape(k, 2, -1), "b": wq[:, h:]}
+        tree = defcg(
+            tree_matvec, b_tree, W=w_tree, ell=ell, tol=0.0, maxiter=iters
+        )
+
+        assert int(flat.info.iterations) == int(tree.info.iterations) == iters
+        x_tree_flat = jnp.concatenate(
+            [tree.x["a"].ravel(), tree.x["b"]]
+        )
+        np.testing.assert_allclose(
+            np.asarray(flat.x), np.asarray(x_tree_flat), rtol=1e-10, atol=1e-10
+        )
+        # recycle bases carry the vector's structure, values identical
+        assert tree.recycle.P["a"].shape == (ell,) + b_tree["a"].shape
+        p_tree_flat = jnp.concatenate(
+            [
+                tree.recycle.P["a"].reshape(ell, -1),
+                tree.recycle.P["b"],
+            ],
+            axis=1,
+        )
+        np.testing.assert_allclose(
+            np.asarray(flat.recycle.P),
+            np.asarray(p_tree_flat),
+            rtol=1e-10,
+            atol=1e-10,
+        )
+
+    def test_recording_window_semantics(self):
+        """stored == min(iterations, ell); rows past convergence stay 0."""
+        a_op, b, _, _ = _gp_newton_system(n=60)
+        res = defcg(a_op, b, tol=1e-13, maxiter=300, ell=50)
+        j = int(res.info.iterations)
+        stored = int(res.recycle.stored)
+        assert stored == min(j, 50)
+        tail = np.asarray(res.recycle.P)[stored:]
+        np.testing.assert_array_equal(tail, 0.0)
+
+    def test_maxiter_shorter_than_window(self):
+        a_op, b, _, _ = _gp_newton_system(n=60)
+        res = defcg(a_op, b, tol=0.0, maxiter=4, ell=8)
+        assert int(res.info.iterations) == 4
+        assert int(res.recycle.stored) == 4
+        assert np.all(np.asarray(res.recycle.P)[:4].any(axis=1))
+        np.testing.assert_array_equal(np.asarray(res.recycle.P)[4:], 0.0)
