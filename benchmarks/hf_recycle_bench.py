@@ -38,8 +38,9 @@ def run(arch="qwen1.5-0.5b", steps=8):
     results = {}
     for recycle in (True, False):
         # tol tight enough that systems need ≫ ell iterations — recycling
-        # pays when solves are long (the paper's overhead argument, §2.2);
-        # the jit-static recycle path floors each solve at ell iterations.
+        # pays when solves are long (the paper's overhead argument, §2.2).
+        # (The recycle path no longer floors solves at ell iterations:
+        # partially filled windows extract through the validity mask.)
         hcfg = HFConfig(
             k=4, ell=8, cg_tol=1e-5, cg_maxiter=120,
             init_damping=1.0, recycle=recycle,

@@ -9,6 +9,7 @@ Sections:
   fig2/3   — paper Fig 2 (iterations/system) + Fig 3 (residual slopes)
   fig4     — paper Fig 4 (inducing-point cost/precision)
   micro    — controlled-spectrum κ_eff validation (paper §2.1)
+  seq      — sequence engine: extraction+refresh overhead, device scan
   hf       — Hessian-free recycling at mini-LM scale
   kernel   — fused-kernel micro-benchmarks
   roofline — dry-run derived roofline table (if artifacts exist)
@@ -48,6 +49,7 @@ def main() -> None:
         paper_fig4,
         paper_fig23,
         paper_table1,
+        seq_bench,
         solver_microbench,
     )
 
@@ -55,6 +57,7 @@ def main() -> None:
     section("fig2+3", paper_fig23.run)
     section("fig4", paper_fig4.run)
     section("micro", solver_microbench.run)
+    section("seq", seq_bench.run)
     section("hf", hf_recycle_bench.run)
     section("kernel", kernel_bench.run)
 

@@ -5,6 +5,7 @@ from repro.core.operators import (
     GGNOperator,
     KernelSystemOperator,
     LinearOperator,
+    apply_to_basis,
     from_callable,
     from_matrix,
     materialize,
@@ -16,9 +17,13 @@ from repro.core.preconditioners import (
 )
 from repro.core.recycle import (
     RecycleManager,
+    SequenceResult,
     harmonic_ritz,
+    harmonic_ritz_flat,
     random_orthonormal_basis,
     recycled_solve_jit,
+    solve_sequence,
+    solve_sequence_jit,
 )
 from repro.core.solvers import (
     CGResult,
@@ -34,6 +39,7 @@ __all__ = [
     "GGNOperator",
     "KernelSystemOperator",
     "LinearOperator",
+    "apply_to_basis",
     "from_callable",
     "from_matrix",
     "materialize",
@@ -41,9 +47,13 @@ __all__ = [
     "nystrom_preconditioner",
     "randomized_nystrom",
     "RecycleManager",
+    "SequenceResult",
     "harmonic_ritz",
+    "harmonic_ritz_flat",
     "random_orthonormal_basis",
     "recycled_solve_jit",
+    "solve_sequence",
+    "solve_sequence_jit",
     "CGResult",
     "RecycleData",
     "SolveInfo",

@@ -41,16 +41,31 @@ class LinearOperator:
       matvec: the matvec closure.  Must be pure and jit-compatible.
       matvec_cost_flops: optional static estimate of flops per matvec,
         used by benchmark accounting (``None`` → unknown).
+      matmat: optional multi-RHS closure ``V ↦ A V`` over column-stacked
+        ``(n, r)`` arrays (array-vector operators only).  When present,
+        :func:`apply_to_basis` refreshes a whole recycled basis in one
+        operator application instead of r sequential matvecs.
     """
 
     matvec: Matvec
     matvec_cost_flops: Optional[float] = None
+    matmat: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None
 
     def __call__(self, v: Pytree) -> Pytree:
         return self.matvec(v)
 
     def __matmul__(self, v: Pytree) -> Pytree:
         return self.matvec(v)
+
+    def basis_matvec(self, basis: Pytree) -> Pytree:
+        """``A`` applied to every vector of a stacked basis (leading axis).
+
+        One ``matmat`` call when available (the basis rows become columns),
+        else a vmapped matvec sweep.
+        """
+        if self.matmat is not None:
+            return self.matmat(jnp.swapaxes(basis, 0, 1)).swapaxes(0, 1)
+        return pt.basis_map_vectors(self.matvec, basis)
 
     # -- composition ------------------------------------------------------
     def shifted(self, sigma) -> "LinearOperator":
@@ -59,13 +74,25 @@ class LinearOperator:
         def mv(v, base=self.matvec):
             return pt.tree_axpy(sigma, v, base(v))
 
-        return LinearOperator(mv, self.matvec_cost_flops)
+        mm = None
+        if self.matmat is not None:
+
+            def mm(vs, base=self.matmat):
+                return base(vs) + sigma * vs
+
+        return LinearOperator(mv, self.matvec_cost_flops, mm)
 
     def scaled(self, c) -> "LinearOperator":
         def mv(v, base=self.matvec):
             return pt.tree_scale(c, base(v))
 
-        return LinearOperator(mv, self.matvec_cost_flops)
+        mm = None
+        if self.matmat is not None:
+
+            def mm(vs, base=self.matmat):
+                return c * base(vs)
+
+        return LinearOperator(mv, self.matvec_cost_flops, mm)
 
     def __add__(self, other: "LinearOperator") -> "LinearOperator":
         def mv(v, a=self.matvec, b=other.matvec):
@@ -74,11 +101,17 @@ class LinearOperator:
         cost = None
         if self.matvec_cost_flops is not None and other.matvec_cost_flops is not None:
             cost = self.matvec_cost_flops + other.matvec_cost_flops
-        return LinearOperator(mv, cost)
+        mm = None
+        if self.matmat is not None and other.matmat is not None:
+
+            def mm(vs, a=self.matmat, b=other.matmat):
+                return a(vs) + b(vs)
+
+        return LinearOperator(mv, cost, mm)
 
     # -- pytree protocol ---------------------------------------------------
     def tree_flatten(self):
-        return (), (self.matvec, self.matvec_cost_flops)
+        return (), (self.matvec, self.matvec_cost_flops, self.matmat)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -93,11 +126,28 @@ def from_matrix(mat: jnp.ndarray) -> LinearOperator:
     def mv(v):
         return mat @ v
 
-    return LinearOperator(mv, matvec_cost_flops=2.0 * n * n)
+    return LinearOperator(mv, matvec_cost_flops=2.0 * n * n, matmat=mv)
 
 
 def from_callable(fn: Matvec, cost: Optional[float] = None) -> LinearOperator:
     return LinearOperator(fn, cost)
+
+
+def apply_to_basis(op, basis: Pytree) -> Pytree:
+    """``A @ [w_1 … w_m]`` as ONE multi-RHS operator application.
+
+    The cross-system refresh of the recycled basis (``AW`` for the next
+    system's operator) is the paper's §2.2 overhead term: issued as m
+    sequential matvecs it costs m operator passes; operators that expose
+    ``basis_matvec`` (all the concrete ones here) amortize it into a
+    single pass — e.g. the fused RBF Gram kernel forms each K-tile once
+    for all m right-hand sides.  Falls back to a vmapped matvec sweep for
+    bare callables.
+    """
+    bm = getattr(op, "basis_matvec", None)
+    if bm is not None:
+        return bm(basis)
+    return pt.basis_map_vectors(op, basis)
 
 
 # ---------------------------------------------------------------------------
@@ -111,10 +161,12 @@ class KernelSystemOperator:
     """``A v = v + H^{1/2} · K (H^{1/2} · v)`` — Kuss–Rasmussen restructuring.
 
     ``kernel_matvec`` computes ``K u`` matrix-free (fused Pallas kernel on
-    TPU, chunked-jnp elsewhere); ``sqrt_h`` is the elementwise vector
-    ``H^{1/2}`` (H diagonal for logistic likelihood).  Eigenvalues of ``A``
-    are confined to ``[1, n·max(K)/4]`` which is what makes CG and def-CG
-    well behaved on this family (paper §3).
+    TPU, chunked-jnp elsewhere) and must also accept column-stacked
+    ``(n, r)`` right-hand sides (both the fused kernel and a dense
+    ``K @ V`` do); ``sqrt_h`` is the elementwise vector ``H^{1/2}`` (H
+    diagonal for logistic likelihood).  Eigenvalues of ``A`` are confined
+    to ``[1, n·max(K)/4]`` which is what makes CG and def-CG well behaved
+    on this family (paper §3).
     """
 
     kernel_matvec: Matvec
@@ -123,6 +175,12 @@ class KernelSystemOperator:
 
     def matvec(self, v):
         return v + self.sqrt_h * self.kernel_matvec(self.sqrt_h * v)
+
+    def basis_matvec(self, basis: jnp.ndarray) -> jnp.ndarray:
+        """``A`` on an ``(m, n)`` stacked basis — one fused multi-RHS
+        Gram pass (each K-tile formed once for all m vectors)."""
+        v = (basis * self.sqrt_h[None, :]).T  # (n, m) column-stacked
+        return basis + self.sqrt_h[None, :] * self.kernel_matvec(v).T
 
     def __call__(self, v):
         return self.matvec(v)
@@ -172,6 +230,20 @@ class GGNOperator:
         _, vjp_fn = jax.vjp(self.model_fn, self.params)
         (gv,) = vjp_fn(hjv)
         return pt.tree_axpy(self.damping, v, gv)
+
+    def basis_matvec(self, basis: Pytree) -> Pytree:
+        """GGN applied to a stacked basis: the model is linearized ONCE
+        and the (linear) tangent/cotangent maps are vmapped over the m
+        vectors — two forward passes total instead of 2m."""
+        outputs, jvp_fn = jax.linearize(self.model_fn, self.params)
+        _, vjp_fn = jax.vjp(self.model_fn, self.params)
+
+        def one(v):
+            hjv = self.loss_hvp(outputs, jvp_fn(v))
+            (gv,) = vjp_fn(hjv)
+            return pt.tree_axpy(self.damping, v, gv)
+
+        return jax.vmap(one)(basis)
 
     def __call__(self, v):
         return self.matvec(v)

@@ -21,22 +21,62 @@ the recycled deflation space for the *next* system in the sequence.
 
 Column equilibration: the generalized eigenproblem is invariant under
 column scaling ``Z → Z D`` (``G → DGD``, ``F → DFD``, ``θ`` unchanged), so
-we scale every column to unit ``‖AZ_i‖`` before factoring — this keeps the
-Cholesky well-posed even when late CG directions have tiny norms.
+we equilibrate to unit ``‖Z_i‖`` / unit ``‖AZ_i‖`` before factoring — this
+keeps the reduction well-posed even when late CG directions have tiny
+norms.
+
+Two implementations share the same math:
+
+* :func:`harmonic_ritz` — the pytree-native original (stacked pytree
+  bases, static sizes).  Kept as the semantic oracle.
+* :func:`harmonic_ritz_flat` — the device-resident engine: flat ``(m, n)``
+  bases, ONE tall-skinny GEMM for all three grams
+  (``kernels.ops.self_gram`` over ``S = [Z; AZ]``), and a traced validity
+  mask instead of dynamic slicing, so a *dynamic* stored count needs no
+  host round-trip.  :func:`solve_sequence` scans it across a whole
+  sequence of systems without leaving the device.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import operators as ops_mod
 from repro.core import pytree as pt
-from repro.core.solvers import CGResult, defcg, defcg_jit
+from repro.core.solvers import CGResult, SolveInfo, defcg, defcg_jit
+from repro.kernels import ops as kops
 
 Pytree = Any
+
+
+def _select_positive_ritz(zeta, Wm, k: int, select: str):
+    """Pick ``k`` Ritz pairs by θ = 1/ζ, clamped to the positive count.
+
+    ζ ≤ 0 can only arise from rounding or masked/projected-out directions
+    (A SPD ⇒ θ > 0) — never select it.  When fewer than ``k`` positive
+    pairs survive the rank filter, the trailing slots are masked to exact
+    zeros (θ = 0, zero eigenvector column) rather than argsorting the
+    ``±inf`` sentinel keys into the selection, which manufactured ~1e300
+    "Ritz values" normalized from near-zero vectors.
+
+    Returns ``(w_sel, theta, slot_ok)`` with shapes ``(m, k), (k,), (k,)``.
+    """
+    npos = jnp.sum(zeta > 0)
+    slot_ok = jnp.arange(k) < jnp.minimum(npos, k)
+    if select == "largest":
+        order = jnp.argsort(jnp.where(zeta > 0, zeta, jnp.inf))[:k]
+    elif select == "smallest":
+        order = jnp.argsort(jnp.where(zeta > 0, zeta, -jnp.inf))[::-1][:k]
+    else:
+        raise ValueError(f"unknown select={select!r}")
+    w_sel = Wm[:, order] * slot_ok[None, :].astype(Wm.dtype)
+    zeta_sel = jnp.where(slot_ok, zeta[order], 1.0)
+    theta = jnp.where(slot_ok, 1.0 / zeta_sel, 0.0)
+    return w_sel, theta, slot_ok
 
 
 def harmonic_ritz(
@@ -59,7 +99,9 @@ def harmonic_ritz(
 
     Returns:
       ``(W, AW, theta)`` — the recycled basis, its A-products, and the k
-      harmonic Ritz values (approximate eigenvalues of A).
+      harmonic Ritz values (approximate eigenvalues of A).  If fewer than
+      ``k`` positive Ritz pairs survive the rank filter, the trailing
+      slots are exact zeros (θ = 0).
     """
     m = pt.basis_size(Z)
     if k > m:
@@ -97,20 +139,7 @@ def harmonic_ritz(
     M = 0.5 * (M + M.T)
     zeta, Wm = jnp.linalg.eigh(M)  # ascending ζ = 1/θ
 
-    # ζ ≤ 0 can only arise from rounding (A SPD ⇒ θ > 0) — never select it.
-    tiny = jnp.asarray(1e-300, zeta.dtype)
-    if select == "largest":
-        zeta_key = jnp.where(zeta > 0, zeta, jnp.inf)
-        order = jnp.argsort(zeta_key)[:k]  # smallest positive ζ → largest θ
-    elif select == "smallest":
-        zeta_key = jnp.where(zeta > 0, zeta, -jnp.inf)
-        order = jnp.argsort(zeta_key)[::-1][:k]
-    else:
-        raise ValueError(f"unknown select={select!r}")
-
-    w_sel = Wm[:, order]  # (m, k)
-    zeta_sel = zeta[order]
-    theta = 1.0 / jnp.where(jnp.abs(zeta_sel) > 1e-300, zeta_sel, 1e-300)
+    w_sel, theta, slot_ok = _select_positive_ritz(zeta, Wm, k, select)
 
     # u = D · Qg S w  (undo reduction and equilibration).
     u = qg @ (s[:, None] * w_sel)
@@ -119,12 +148,14 @@ def harmonic_ritz(
     W = pt.basis_matmul(Z, u)
     AW = pt.basis_matmul(AZ, u)
 
-    # Normalize the recycled vectors to unit 2-norm (pure conditioning).
+    # Normalize the recycled vectors to unit 2-norm (pure conditioning);
+    # clamped slots stay exactly zero.
     col_norms = jnp.sqrt(
         jnp.maximum(jnp.diag(pt.gram(W, W)), jnp.finfo(u.dtype).tiny)
     )
-    W = pt.basis_scale_columns(W, 1.0 / col_norms)
-    AW = pt.basis_scale_columns(AW, 1.0 / col_norms)
+    col_scale = jnp.where(slot_ok, 1.0 / col_norms, 0.0)
+    W = pt.basis_scale_columns(W, col_scale)
+    AW = pt.basis_scale_columns(AW, col_scale)
     return W, AW, theta
 
 
@@ -133,43 +164,337 @@ harmonic_ritz_jit = jax.jit(
 )
 
 
-def _basis_map_maybe_jit(A, W):
-    """``A @ w_i`` for every basis vector — jitted when A is a pytree node
+def harmonic_ritz_flat(
+    Z: jnp.ndarray,
+    AZ: jnp.ndarray,
+    k: int,
+    *,
+    valid: Optional[jnp.ndarray] = None,
+    select: str = "largest",
+    jitter: float = 1e-10,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Device-resident harmonic Ritz over flat ``(m, n)`` row-stacked bases.
+
+    The sequence-engine twin of :func:`harmonic_ritz`:
+
+    * ``valid`` is an optional *traced* ``(m,)`` bool mask — rows whose
+      slot is invalid (unfilled recording window, clamped basis columns)
+      are zeroed and flow through the rank filter as exact nulls, so a
+      dynamic stored count costs no host round-trip and no dynamic shapes;
+    * the three gram passes (``ZZᵀ`` for column norms, ``G``, ``F``)
+      collapse into ONE tall-skinny GEMM over ``S = [Z; AZ]``
+      (:func:`repro.kernels.ops.self_gram`) — its quadrants are sliced on
+      device.  Column equilibration is applied to the *gram entries*
+      (exact invariance), not the O(m·n) basis data.
+
+    Returns ``(W, AW, theta)`` of shapes ``(k, n), (k, n), (k,)``; slots
+    past the surviving positive-Ritz count are exact zeros — downstream
+    def-CG treats a zero column as a no-op deflation direction (see the
+    jitter floor in ``solvers.defcg``).
+    """
+    m = Z.shape[0]
+    if k > m:
+        raise ValueError(f"cannot extract k={k} Ritz vectors from m={m} basis")
+    if valid is not None:
+        vz = valid.astype(Z.dtype)[:, None]
+        Z = Z * vz
+        AZ = AZ * vz
+
+    full = kops.self_gram(jnp.concatenate([Z, AZ], axis=0))  # (2m, 2m)
+    # Quadrants: ⎡ZZᵀ  ·⎤ — diag(ZZᵀ) are the column norms, the lower
+    #            ⎣F    G⎦   blocks are the projection grams.
+    zz = jnp.diag(full[:m, :m])
+    dz = jnp.where(zz > 0, jax.lax.rsqrt(zz), 0.0)
+    G = full[m:, m:] * dz[:, None] * dz[None, :]
+    F = full[m:, :m] * dz[:, None] * dz[None, :]
+    F = 0.5 * (F + F.T)
+
+    # Second-stage equilibration on ‖AZ_i‖.
+    d = jnp.where(jnp.diag(G) > 0, jnp.diag(G), 1.0) ** -0.5
+    G = G * d[:, None] * d[None, :]
+    F = F * d[:, None] * d[None, :]
+
+    # Rank-revealing reduction (identical to the pytree path): masked and
+    # near-dependent columns surface as λ ≈ 0 and are projected out.
+    lam, qg = jnp.linalg.eigh(G)
+    eps = jnp.finfo(G.dtype).eps
+    rcond = jnp.maximum(jnp.asarray(jitter, G.dtype), 100.0 * eps) * m
+    good = lam > rcond * lam[-1]
+    s = jnp.where(good, 1.0 / jnp.sqrt(jnp.maximum(lam, 1e-300)), 0.0)
+    M = s[:, None] * (qg.T @ F @ qg) * s[None, :]
+    M = 0.5 * (M + M.T)
+    zeta, Wm = jnp.linalg.eigh(M)
+
+    w_sel, theta, slot_ok = _select_positive_ritz(zeta, Wm, k, select)
+
+    # u folds the reduction and BOTH equilibrations, so it applies to the
+    # raw (unnormalized) bases: u = D_z · D · Qg S w.
+    u = qg @ (s[:, None] * w_sel)
+    u = u * (d * dz)[:, None]
+    u = u.astype(Z.dtype)
+
+    W = u.T @ Z  # (k, n)
+    AW = u.T @ AZ
+
+    wn = jnp.sqrt(jnp.maximum(jnp.sum(W * W, axis=1), jnp.finfo(u.dtype).tiny))
+    col_scale = jnp.where(slot_ok, 1.0 / wn, 0.0).astype(W.dtype)
+    W = W * col_scale[:, None]
+    AW = AW * col_scale[:, None]
+    return W, AW, theta
+
+
+def _extract_next_basis(
+    w_flat: Optional[jnp.ndarray],
+    aw_flat: Optional[jnp.ndarray],
+    p_flat: jnp.ndarray,
+    ap_flat: jnp.ndarray,
+    stored,
+    k: int,
+    *,
+    select: str = "largest",
+    jitter: float = 1e-10,
+):
+    """One cross-system extraction on the flat engine.
+
+    ``Z = [W, P]`` with a traced validity mask: W rows are valid where
+    nonzero (clamped slots are exact zeros), P rows where their index is
+    below the dynamic ``stored`` count.  Shape-static throughout.
+    """
+    ell = p_flat.shape[0]
+    p_valid = jnp.arange(ell) < stored
+    if w_flat is None:
+        Z, AZ, valid = p_flat, ap_flat, p_valid
+    else:
+        Z = jnp.concatenate([w_flat, p_flat], axis=0)
+        AZ = jnp.concatenate([aw_flat, ap_flat], axis=0)
+        w_valid = jnp.sum(w_flat * w_flat, axis=1) > 0
+        valid = jnp.concatenate([w_valid, p_valid])
+    return harmonic_ritz_flat(
+        Z, AZ, k, valid=valid, select=select, jitter=jitter
+    )
+
+
+def _apply_basis_flat(A, unravel, w_flat: jnp.ndarray) -> jnp.ndarray:
+    """``A @ W`` for a flat ``(k, n)`` basis — one multi-RHS application
+    through the operator's pytree coordinates."""
+    basis = pt.unravel_basis(w_flat, unravel)
+    return pt.ravel_basis(ops_mod.apply_to_basis(A, basis))
+
+
+# ---------------------------------------------------------------------------
+# The device-resident sequence engine
+# ---------------------------------------------------------------------------
+
+
+class SequenceResult(NamedTuple):
+    """Stacked outputs of :func:`solve_sequence` (leading axis = system)."""
+
+    x: Pytree  # per-system solutions
+    info: SolveInfo  # per-system diagnostics (all fields stacked)
+    theta: jnp.ndarray  # (num_systems, k) harmonic Ritz values
+    W: jnp.ndarray  # final recycled basis, flat (k, n)
+    AW: jnp.ndarray  # its A-products under the last refresh
+
+
+def solve_sequence(
+    systems: Any,
+    b_seq: Pytree,
+    W0: Optional[jnp.ndarray] = None,
+    AW0: Optional[jnp.ndarray] = None,
+    *,
+    k: int,
+    ell: int,
+    make_operator: Optional[Callable[[Any], Any]] = None,
+    tol: float = 1e-5,
+    maxiter: int = 1000,
+    select: str = "largest",
+    waw_jitter: float = 1e-12,
+    refresh_aw: str = "exact",
+    carry_x: bool = False,
+) -> SequenceResult:
+    """Solve a whole sequence of related SPD systems on-device.
+
+    This is the paper's outer loop (§2.3, Fig. 1–2) as a single
+    ``lax.scan``: the recycled basis ``(W, AW)`` and (optionally) the
+    warm-start solution are carried as flat device arrays across systems,
+    every solve runs the flat def-CG engine, the basis refresh is ONE
+    multi-RHS operator application, and the harmonic-Ritz extraction is
+    the masked flat form — zero host syncs between systems, so the whole
+    sequence jits (and pjit-shards) as one XLA computation.
+
+    Args:
+      systems: a pytree of per-system operator data with a leading
+        system axis on every leaf — either a stacked operator pytree
+        (e.g. a ``KernelSystemOperator`` whose ``sqrt_h`` is ``(N, n)``)
+        consumed directly, or raw data mapped through ``make_operator``.
+      b_seq: stacked right-hand sides (leading system axis on each leaf).
+      W0, AW0: optional initial flat ``(k, n)`` recycled basis and its
+        A-products.  ``None`` bootstraps from zeros: system 1 then runs
+        an exact no-op deflation (plain CG + recording), exactly how a
+        sequence starts cold.
+      make_operator: maps one system slice to an SPD operator
+        (``None`` → the slice *is* the operator).  Must be a stable
+        callable for jit caching.
+      refresh_aw: ``"exact"`` — recompute ``A⁽ⁱ⁾W`` per system with one
+        multi-RHS pass (k matvecs of accounted cost); ``"stale"`` — reuse
+        the extraction's ``AW`` (zero matvecs, approximate deflation, the
+        paper's cheap mode; def-CG spends one true matvec re-deriving r₀).
+        Stale deflation is exact for an unchanged operator (multiple RHS)
+        but can destabilize the conjugacy recurrence under drift — this
+        fully-traced path has no breakdown fallback, so prefer ``"exact"``
+        for drifting sequences (see :class:`RecycleManager`).
+      carry_x: warm-start each system with the previous solution
+        (Alg. 1's ``x_{-1}``).
+
+    Returns:
+      :class:`SequenceResult` with per-system solutions/diagnostics and
+      the final basis, ready to seed the next call.
+    """
+    if refresh_aw not in ("exact", "stale"):
+        raise ValueError(f"unknown refresh_aw={refresh_aw!r}")
+    if refresh_aw == "stale" and W0 is not None and AW0 is None:
+        # A zero AW against a real W makes the deflated initial guess
+        # garbage while the residual still converges — a silently wrong
+        # "solution".  Stale mode never recomputes AW, so it must be fed.
+        raise ValueError("refresh_aw='stale' with W0 requires AW0")
+    make_op = make_operator if make_operator is not None else (lambda s: s)
+
+    b0 = jax.tree_util.tree_map(lambda l: l[0], b_seq)
+    b0_flat, unravel = pt.ravel_vector(b0)
+    n = b0_flat.shape[0]
+    dtype = b0_flat.dtype
+
+    w_init = jnp.zeros((k, n), dtype) if W0 is None else W0.astype(dtype)
+    aw_init = (
+        jnp.zeros((k, n), dtype)
+        if (AW0 is None or W0 is None)
+        else AW0.astype(dtype)
+    )
+    x_init = jnp.zeros((n,), dtype)
+
+    def body(carry, xs):
+        w, aw, x_prev = carry
+        sys_i, b = xs
+        A = make_op(sys_i)
+        if refresh_aw == "exact":
+            # Cold bootstrap (all-zero W, only system 1 with W0=None):
+            # A @ 0 = 0 — skip the k operator passes and their accounting.
+            has_w = jnp.any(w != 0)
+            aw_used = jax.lax.cond(
+                has_w,
+                lambda ww: _apply_basis_flat(A, unravel, ww),
+                jnp.zeros_like,
+                w,
+            )
+        else:
+            aw_used = aw
+        x0 = unravel(x_prev) if carry_x else None
+        result = defcg(
+            A,
+            b,
+            x0,
+            W=w,
+            AW=aw_used,
+            ell=ell,
+            tol=tol,
+            maxiter=maxiter,
+            waw_jitter=waw_jitter,
+            exact_aw=(refresh_aw == "exact"),
+            flat_recycle=True,
+        )
+        w2, aw2, theta = _extract_next_basis(
+            w,
+            aw_used,
+            result.recycle.P,
+            result.recycle.AP,
+            result.recycle.stored,
+            k,
+            select=select,
+        )
+        info = result.info
+        if refresh_aw == "exact":
+            # The multi-RHS refresh is one fused pass but k matvecs of
+            # operator work — the §2.2 overhead term, reported honestly
+            # (zero on the cold bootstrap system, where it was skipped).
+            info = info._replace(
+                matvecs=info.matvecs + k * has_w.astype(info.matvecs.dtype)
+            )
+        x_flat = pt.ravel(result.x)
+        return (w2, aw2, x_flat), (result.x, info, theta)
+
+    (w_fin, aw_fin, _), (xs_out, infos, thetas) = jax.lax.scan(
+        body, (w_init, aw_init, x_init), (systems, b_seq)
+    )
+    return SequenceResult(
+        x=xs_out, info=infos, theta=thetas, W=w_fin, AW=aw_fin
+    )
+
+
+solve_sequence_jit = jax.jit(
+    solve_sequence,
+    static_argnames=(
+        "k",
+        "ell",
+        "make_operator",
+        "tol",
+        "maxiter",
+        "select",
+        "waw_jitter",
+        "refresh_aw",
+        "carry_x",
+    ),
+)
+
+
+def _apply_basis_maybe_jit(A, W):
+    """One multi-RHS ``A @ W`` — jitted when A is a pytree node
     (stable-closure operators hit the jit cache), eager otherwise."""
     try:
-        return _basis_map_jitted(A, W)
+        return _apply_basis_jitted(A, W)
     except TypeError:  # A is a bare callable, not a registered pytree node
-        return pt.basis_map_vectors(A, W)
+        return ops_mod.apply_to_basis(A, W)
 
 
 @jax.jit
-def _basis_map_jitted(A, W):
-    return pt.basis_map_vectors(A, W)
+def _apply_basis_jitted(A, W):
+    return ops_mod.apply_to_basis(A, W)
 
 
 @dataclasses.dataclass
 class RecycleManager:
     """Carries the recycled subspace across a *sequence* of SPD systems.
 
-    This object is the paper's outer-loop state: call :meth:`solve` once per
-    system ``A⁽ⁱ⁾ x = b⁽ⁱ⁾``; it runs ``def-CG(k, ell)`` with the current
-    recycled basis (plain CG + recording for the first system), then
-    refreshes the basis by harmonic-Ritz extraction.
+    This object is the host-driven convenience wrapper over the sequence
+    engine: call :meth:`solve` once per system ``A⁽ⁱ⁾ x = b⁽ⁱ⁾``; it runs
+    ``def-CG(k, ell)`` with the current recycled basis (plain CG +
+    recording for the first system), then refreshes the basis by the flat
+    masked harmonic-Ritz extraction — the stored count stays a device
+    scalar (no host round-trip), and the ``AW`` refresh is one multi-RHS
+    operator application.  Fully-jitted outer loops should scan
+    :func:`solve_sequence` instead (one XLA computation, zero host
+    involvement between systems); the manager adds host-side resilience
+    (breakdown fallback) on the same primitives.
 
     ``refresh_aw`` controls how ``A⁽ⁱ⁺¹⁾W`` is obtained:
 
-    * ``"exact"`` — recompute with k fresh matvecs (the O(k n²) overhead the
-      paper accounts for in §2.2).  Deflation identities hold exactly.
+    * ``"exact"`` — recompute with one multi-RHS pass (k matvecs of
+      operator work — the O(k n²) overhead the paper accounts for in
+      §2.2).  Deflation identities hold exactly.
     * ``"stale"`` — reuse ``A⁽ⁱ⁾W = AZ·U`` from the extraction (zero
-      matvecs; this matches the paper's ``O(n²(ℓ+1)k)`` cost accounting for
-      obtaining *both* W and AW from stored quantities).  The deflation
-      projector is then approximate — CG's own residual recurrence stays
-      exact, so the solution is still correct; only the deflation
-      *effectiveness* degrades with the drift ‖A⁽ⁱ⁺¹⁾ − A⁽ⁱ⁾‖, which is
-      precisely the stagnation the paper observes in Fig. 2.
+      matvecs; this matches the paper's ``O(n²(ℓ+1)k)`` cost accounting
+      for obtaining *both* W and AW from stored quantities).  The
+      deflation projector is then approximate, and with operator drift
+      the error compounds through the direction recurrence: ``Wᵀr = 0``
+      is no longer maintained, the CG step scalars lose their line-search
+      property, and the solve can *diverge* outright (observed; the
+      extreme form of the Fig. 2 stagnation).  The breakdown fallback
+      below catches exactly this — it re-solves clean and, since the
+      accounting fix, reports the true total cost including the failed
+      attempt.  Stale mode is exact (and safe) when the operator is
+      unchanged between systems — the multiple-RHS setting.
 
-    ``reuse_aw=True`` on a call additionally declares the operator unchanged
-    since the previous solve (multiple RHS against one matrix).
+    ``reuse_aw=True`` on a call additionally declares the operator
+    unchanged since the previous solve (multiple RHS against one matrix).
 
     The manager state (W, AW) is an ordinary pytree of device arrays: it
     shards like the solution vector, persists on-device across systems, and
@@ -210,16 +535,16 @@ class RecycleManager:
         maxiter = self.maxiter if maxiter is None else maxiter
 
         AW = self.AW
-        needs_fresh = (
-            self.W is not None
-            and not reuse_aw
-            and (AW is None or self.refresh_aw == "exact")
+        # A basis with no A-products at all (seed() without AW) must be
+        # refreshed even under reuse_aw — there is nothing to reuse.
+        needs_fresh = self.W is not None and (
+            AW is None or (not reuse_aw and self.refresh_aw == "exact")
         )
         if needs_fresh:
             AW = (
-                _basis_map_maybe_jit(A, self.W)
+                _apply_basis_maybe_jit(A, self.W)
                 if self.use_jit
-                else pt.basis_map_vectors(A, self.W)
+                else ops_mod.apply_to_basis(A, self.W)
             )
 
         solve_fn = defcg_jit if self.use_jit else defcg
@@ -235,23 +560,38 @@ class RecycleManager:
             record_residuals=record_residuals,
             waw_jitter=self.waw_jitter,
             exact_aw=needs_fresh or reuse_aw or self.W is None,
+            flat_recycle=True,  # _refresh consumes (P, AP) flat
         )
-        refresh_cost = self.k if needs_fresh else 0
+        # Charge what the refresh actually computed: a seeded basis may
+        # hold fewer than self.k vectors.
+        refresh_cost = pt.basis_size(self.W) if needs_fresh else 0
 
         if self.W is not None and (
             bool(result.info.breakdown) or not bool(result.info.converged)
         ):
             # Resilience: a stale/ill-conditioned basis can poison the
             # conjugacy recurrences.  Drop it and re-solve clean — the
-            # sequence continues with a freshly bootstrapped space.
+            # sequence continues with a freshly bootstrapped space.  The
+            # failed attempt's matvecs (and the refresh spent on the
+            # discarded basis) were still paid — fold them into the
+            # reported total rather than silently dropping them.
+            failed_matvecs = result.info.matvecs
             self.W = self.AW = self.theta = None
+            AW = None
             result = solve_fn(
                 A, b, x0,
                 ell=self.ell, tol=tol, maxiter=maxiter,
                 record_residuals=record_residuals,
+                flat_recycle=True,
             )
-
-        if refresh_cost:
+            result = result._replace(
+                info=result.info._replace(
+                    matvecs=result.info.matvecs
+                    + failed_matvecs
+                    + refresh_cost
+                )
+            )
+        elif refresh_cost:
             result = result._replace(
                 info=result.info._replace(
                     matvecs=result.info.matvecs + refresh_cost
@@ -266,19 +606,38 @@ class RecycleManager:
         rec = result.recycle
         if rec is None:
             return
-        stored = int(rec.stored)  # host sync between systems — cheap
-        if stored == 0:
+        if int(rec.stored) == 0:
+            # Nothing recorded (0-iteration solve: x0 was already exact) —
+            # keep the current basis as-is.  In particular a None basis
+            # must stay None, not become a phantom zero basis that every
+            # later solve "refreshes" for k wasted matvecs.  This scalar
+            # read costs nothing extra: solve() already synced on
+            # result.info.converged, so the value is sitting on the host
+            # side of a completed computation — unlike the old path, it
+            # gates no shapes and triggers no per-count recompiles.
             return
-        P = pt.basis_slice(rec.P, stored)
-        AP = pt.basis_slice(rec.AP, stored)
-        if self.W is not None:
-            Z = pt.basis_concat(self.W, P)
-            AZ = pt.basis_concat(AW, AP)
-        else:
-            Z, AZ = P, AP
-        k = min(self.k, pt.basis_size(Z))
-        extract = harmonic_ritz_jit if self.use_jit else harmonic_ritz
-        self.W, self.AW, self.theta = extract(Z, AZ, k, select=self.select)
+        # Flat masked extraction: the dynamic stored count feeds the jitted
+        # extraction as a device scalar (the pre-flat-engine path
+        # static-sliced on it, recompiling for every distinct count).
+        _, unravel = pt.ravel_vector(result.x)
+        P, AP = rec.P, rec.AP  # already flat (flat_recycle=True)
+        w_flat = pt.ravel_basis(self.W) if self.W is not None else None
+        aw_flat = pt.ravel_basis(AW) if self.W is not None else None
+        k = min(self.k, P.shape[0] + (0 if w_flat is None else w_flat.shape[0]))
+        extract = (
+            _extract_next_basis_jit if self.use_jit else _extract_next_basis
+        )
+        W_new, AW_new, theta = extract(
+            w_flat, aw_flat, P, AP, rec.stored, k, select=self.select
+        )
+        self.W = pt.unravel_basis(W_new, unravel)
+        self.AW = pt.unravel_basis(AW_new, unravel)
+        self.theta = theta
+
+
+_extract_next_basis_jit = jax.jit(
+    _extract_next_basis, static_argnames=("k", "select", "jitter")
+)
 
 
 def recycled_solve_jit(
@@ -295,15 +654,17 @@ def recycled_solve_jit(
 ) -> Tuple[Pytree, Pytree, CGResult]:
     """Single-shot, fully traceable solve+extract for jitted outer loops.
 
-    Unlike :class:`RecycleManager` (host-driven, dynamic stored count), this
-    variant is shape-static so it can live *inside* a pjit-ed Hessian-free
-    train step: it forces ``min_iters=ell`` (all buffers valid) and always
-    deflates with the provided basis ``W`` — callers bootstrap with a random
-    orthonormal basis, which is a valid (merely unhelpful) deflation space.
+    One step of the sequence engine for callers that carry ``W`` in their
+    own state (the Hessian-free optimizer): one multi-RHS ``AW`` refresh,
+    a flat def-CG solve, and the masked flat extraction.  The recording
+    window no longer needs a ``min_iters`` floor — a partially filled
+    window extracts through the validity mask, so early-converging solves
+    stop early instead of burning ``ell`` matvecs to fill buffers.
 
-    Returns ``(W_next, x, result)``.
+    Callers bootstrap with a random orthonormal basis, which is a valid
+    (merely unhelpful) deflation space.  Returns ``(W_next, x, result)``.
     """
-    AW = pt.basis_map_vectors(A, W)
+    AW = ops_mod.apply_to_basis(A, W)
     result = defcg(
         A,
         b,
@@ -313,13 +674,27 @@ def recycled_solve_jit(
         ell=ell,
         tol=tol,
         maxiter=maxiter,
-        min_iters=ell,
-        waw_jitter=1e-10,
+        waw_jitter=1e-12,
+        flat_recycle=True,
     )
-    Z = pt.basis_concat(W, result.recycle.P)
-    AZ = pt.basis_concat(AW, result.recycle.AP)
-    W_next, _, _ = harmonic_ritz(Z, AZ, k, select=select)
-    return W_next, result.x, result
+    _, unravel = pt.ravel_vector(b)
+    w_flat = pt.ravel_basis(W)
+    aw_flat = pt.ravel_basis(AW)
+    W_next, _, _ = _extract_next_basis(
+        w_flat,
+        aw_flat,
+        result.recycle.P,
+        result.recycle.AP,
+        result.recycle.stored,
+        k,
+        select=select,
+    )
+    result = result._replace(
+        info=result.info._replace(
+            matvecs=result.info.matvecs + pt.basis_size(W)
+        )
+    )
+    return pt.unravel_basis(W_next, unravel), result.x, result
 
 
 def random_orthonormal_basis(key, template: Pytree, k: int) -> Pytree:

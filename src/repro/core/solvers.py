@@ -209,6 +209,7 @@ def defcg(
     record_residuals: bool = False,
     waw_jitter: float = 0.0,
     exact_aw: bool = True,
+    flat_recycle: bool = False,
 ) -> CGResult:
     """Deflated CG — ``def-CG(k, ell)`` of the paper (k = basis size of W).
 
@@ -223,12 +224,22 @@ def defcg(
       ell: number of leading (p, Ap) pairs to record for Ritz extraction.
       min_iters: force at least this many iterations (useful to guarantee
          ``ell`` stored columns inside fully-jitted outer loops).
-      waw_jitter: relative diagonal jitter for the k×k Cholesky.
+      waw_jitter: relative diagonal jitter for the k×k Cholesky.  Keep
+         this SMALL (≲1e-12): the jitter perturbs μ = (WᵀAW)⁻¹(AW)ᵀr, and
+         the un-deflated W-component it reinjects each iteration compounds
+         — with a well-converged Ritz basis and a wide θ spread, jitter
+         ≳1e-8 makes def-CG diverge outright (measured).  Exactly-zero
+         basis columns (clamped extraction slots) are regularized away
+         unconditionally regardless of this setting.
       exact_aw: declare that ``AW`` is exactly ``A @ W``.  When False (a
          *stale* basis recycled across a drifted operator — the paper's
          cheap mode), the initial residual is recomputed with one true
          matvec instead of the ``r0 = r − AW c`` shortcut, keeping CG's
          convergence target exact while the deflation is approximate.
+      flat_recycle: return the recorded ``(P, AP)`` as raw flat
+         ``(ell, n)`` arrays instead of unraveling them to the vector's
+         pytree structure — the device-resident sequence engine consumes
+         them flat, so the round-trip would be pure waste.
 
     Internals: the whole solve — setup (Wᵀ A W factorization, deflated
     initial guess) and iteration — runs on the flat engine: the vector
@@ -272,10 +283,19 @@ def defcg(
             aw_flat = pt.ravel_basis(AW)
         waw = pt.gram(w_flat, aw_flat)
         waw = 0.5 * (waw + waw.T)
+        dj = jnp.diag(waw)
+        tr = jnp.sum(dj)
         if waw_jitter:
-            waw = waw + waw_jitter * (jnp.trace(waw) / k) * jnp.eye(
-                k, dtype=waw.dtype
-            )
+            scale = jnp.where(tr > 0, tr / k, 1.0)
+            waw = waw + waw_jitter * scale * jnp.eye(k, dtype=waw.dtype)
+        # Exactly-zero columns (clamped extraction slots — see
+        # recycle.harmonic_ritz_flat) are regularized UNconditionally:
+        # Wᵀr = 0 there, so any positive diagonal entry yields the same
+        # deflation result (c_i = μ_i = 0) while keeping the Cholesky
+        # finite.  A no-op when no column is zero, whatever waw_jitter is.
+        waw = waw + jnp.diag(
+            jnp.where(dj == 0.0, jnp.maximum(tr / k, 1.0), 0.0)
+        )
         waw_cho = cho_factor(waw)
 
         r_init = b_flat - A_flat(x_flat)
@@ -398,11 +418,16 @@ def defcg(
     )
     recycle = None
     if ell > 0:
-        recycle = RecycleData(
-            P=pt.unravel_basis(p_rows, unravel),
-            AP=pt.unravel_basis(ap_rows, unravel),
-            stored=jnp.minimum(j, ell),
-        )
+        if flat_recycle:
+            recycle = RecycleData(
+                P=p_rows, AP=ap_rows, stored=jnp.minimum(j, ell)
+            )
+        else:
+            recycle = RecycleData(
+                P=pt.unravel_basis(p_rows, unravel),
+                AP=pt.unravel_basis(ap_rows, unravel),
+                stored=jnp.minimum(j, ell),
+            )
     return CGResult(x=unravel(x), info=info, recycle=recycle)
 
 
@@ -442,5 +467,6 @@ defcg_jit = jax.jit(
         "record_residuals",
         "waw_jitter",
         "exact_aw",
+        "flat_recycle",
     ),
 )

@@ -9,7 +9,12 @@ iteration solves the SPD system (paper Eq. 9–10)
 whose eigenvalues lie in [1, n·max(K)/4].  The solver is pluggable —
 ``cholesky`` (exact, the paper's cubic baseline), ``cg``, or ``defcg``
 with a :class:`repro.core.RecycleManager` carrying the deflation basis
-across Newton iterations (the paper's contribution).
+across Newton iterations (the paper's contribution).  Since the operator
+changes every Newton step (H½ moves with f), the manager recomputes
+``A⁽ⁱ⁾W`` each iteration — via ``KernelSystemOperator.basis_matvec``
+this is ONE fused multi-RHS Gram pass (each K-tile formed once for all k
+recycled vectors), not k sequential matvecs; both the matrix-free kernel
+matvec and the dense ``K @ V`` path batch natively.
 
 The logistic likelihood p(y_i|f_i) = σ(y_i f_i) with y ∈ {−1, +1}.
 """

@@ -340,6 +340,87 @@ def fused_deflate_direction_pallas(
     return p_new, p_buf_new, ap_buf_new
 
 
+# ---------------------------------------------------------------------------
+# self_gram: S Sᵀ for a stacked flat basis — the extraction's single GEMM
+# ---------------------------------------------------------------------------
+#
+# Harmonic-Ritz extraction needs G = (AZ)(AZ)ᵀ and F = (AZ)Zᵀ.  Stacking
+# S = [Z; AZ] (2m, n) and forming S Sᵀ yields both as quadrants in ONE
+# tall-skinny GEMM — one read of the basis data instead of three separate
+# gram passes (ZZᵀ for column norms, then G, then F).
+
+
+def _self_gram_kernel(s_ref, o_ref, acc_ref):
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    sb = s_ref[...].astype(jnp.float32)  # (m_pad, bn)
+    acc_ref[...] += jax.lax.dot_general(
+        sb, sb, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(j == pl.num_programs(0) - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def self_gram_pallas(
+    s: jnp.ndarray, *, block: int = 2048, interpret: bool = False
+) -> jnp.ndarray:
+    """``S Sᵀ`` for ``S`` of shape ``(m, n)``, blocked over ``n``.
+
+    The grid walks n-blocks sequentially and accumulates the ``(m, m)``
+    Gram tile in a VMEM scratch (f32); only the final step writes back.
+    Zero-padding in both axes is exact (padded rows/cols contribute 0 and
+    padded output rows are sliced off).
+    """
+    m, n = s.shape
+    m_pad = _round_up(max(m, 8), 8)
+    bn = min(_round_up(block, _LANES), _round_up(n, _LANES))
+    n_pad = _round_up(n, bn)
+    s_p = jnp.pad(s, ((0, m_pad - m), (0, n_pad - n)))
+
+    out = pl.pallas_call(
+        _self_gram_kernel,
+        grid=(n_pad // bn,),
+        in_specs=[pl.BlockSpec((m_pad, bn), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((m_pad, m_pad), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, m_pad), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((m_pad, m_pad), jnp.float32)],
+        compiler_params=CompilerParams(dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+        name="self_gram",
+    )(s_p)
+    return out[:m, :m].astype(_acc(s.dtype))
+
+
+def self_gram_chunked(s: jnp.ndarray, block: int = 8192) -> jnp.ndarray:
+    """Pure-jnp twin: scan over n-blocks, accumulating in the acc dtype.
+
+    A single GEMM when ``n ≤ block`` (the usual extraction size); the
+    blocked scan bounds live memory for very long flat vectors.
+    """
+    acc = _acc(s.dtype)
+    m, n = s.shape
+    if n <= block:
+        sa = s.astype(acc)
+        return sa @ sa.T
+    n_pad = _round_up(n, block)
+    sp = jnp.pad(s, ((0, 0), (0, n_pad - n))).astype(acc)
+    blocks = sp.reshape(m, n_pad // block, block).transpose(1, 0, 2)
+
+    def body(g, sb):
+        return g + sb @ sb.T, None
+
+    g0 = jnp.zeros((m, m), acc)
+    g, _ = jax.lax.scan(body, g0, blocks)
+    return g
+
+
 def fused_deflate_direction_chunked(
     r, p, beta, w=None, mu=None, ap=None, idx=None, p_buf=None, ap_buf=None
 ):

@@ -31,6 +31,8 @@ from repro.kernels.cg_fused import (
     fused_cg_update_pallas,
     fused_deflate_direction_chunked,
     fused_deflate_direction_pallas,
+    self_gram_chunked,
+    self_gram_pallas,
 )
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.rbf_matvec import rbf_matvec_pallas
@@ -179,6 +181,31 @@ def fused_deflate_direction(
         return fused_deflate_direction_chunked(
             r, p, beta, w, mu, ap, idx, p_buf, ap_buf
         )
+    raise ValueError(f"unknown impl={impl!r}")
+
+
+def self_gram(
+    s: jnp.ndarray,
+    *,
+    impl: str = "auto",
+    block: int = 8192,
+) -> jnp.ndarray:
+    """``S Sᵀ`` for a stacked flat basis ``S`` of shape ``(m, n)``.
+
+    The harmonic-Ritz extraction stacks ``S = [Z; AZ]`` and reads its
+    ``G``/``F`` gram blocks out of the quadrants of this one tall-skinny
+    GEMM (one pass over the basis data).  Accumulates in f32 on the TPU
+    kernel and in the acc dtype (f64-preserving) elsewhere.
+    """
+    impl = _resolve(impl)
+    if impl in ("pallas", "interpret"):
+        return self_gram_pallas(
+            s, block=min(block, 2048), interpret=(impl == "interpret")
+        )
+    if impl == "reference":
+        return ref.self_gram(s)
+    if impl == "chunked":
+        return self_gram_chunked(s, block)
     raise ValueError(f"unknown impl={impl!r}")
 
 

@@ -73,6 +73,22 @@ def fused_deflate_direction(
     return p_new, p_buf, ap_buf
 
 
+def self_gram(s: jnp.ndarray) -> jnp.ndarray:
+    """Semantic definition of the stacked self-Gram ``S Sᵀ``.
+
+    ``S`` is an ``(m, n)`` stacked flat basis (rows are vectors); the
+    result is the ``(m, m)`` Gram matrix accumulated in at least f32 —
+    the single tall-skinny GEMM the harmonic-Ritz extraction builds its
+    ``G``/``F`` blocks from (stack ``[Z; AZ]`` and slice the quadrants).
+    """
+    acc = (
+        jnp.float64 if s.dtype == jnp.float64
+        else jnp.promote_types(s.dtype, jnp.float32)
+    )
+    sa = s.astype(acc)
+    return sa @ sa.T
+
+
 # ---------------------------------------------------------------------------
 # Attention (GQA, optional causal) — oracle for flash_attention
 # ---------------------------------------------------------------------------

@@ -12,10 +12,15 @@ optimizer converges, consecutive GGN operators drift less and recycling
 buys more (paper §3, "the iterates change less and less").
 
 Everything (def-CG loop included) is shape-static and jit-compatible, so
-``hf_step`` pjit-shards across a pod like any train step.  Damping follows
-the Levenberg-Marquardt reduction-ratio rule.  The recycle basis W and the
-previous step direction (used as the warm start, Alg. 1's ``x_{-1}``) are
-part of the optimizer state — and therefore of checkpoints.
+``hf_step`` pjit-shards across a pod like any train step.  The inner
+solve+extract is one step of the device-resident sequence engine
+(``recycled_solve_jit``): the GGN is linearized once for the whole
+multi-RHS ``AW`` refresh, and the harmonic-Ritz extraction is the masked
+flat form — no ``min_iters`` floor, so early-converging solves stop
+early.  Damping follows the Levenberg-Marquardt reduction-ratio rule.
+The recycle basis W and the previous step direction (used as the warm
+start, Alg. 1's ``x_{-1}``) are part of the optimizer state — and
+therefore of checkpoints.
 """
 
 from __future__ import annotations
@@ -154,6 +159,7 @@ def hf_step(
         "rho": rho,
         "damping": damping,
         "cg_iterations": result.info.iterations,
+        "cg_matvecs": result.info.matvecs,
         "cg_residual": result.info.residual_norm,
         "accepted": accept,
     }

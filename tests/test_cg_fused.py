@@ -129,6 +129,39 @@ class TestFusedDeflateDirection:
         assert got[1] is None and got[2] is None
 
 
+class TestSelfGram:
+    """Oracle parity for the stacked-gram pass (harmonic Ritz's one GEMM)."""
+
+    # (m, n, block): aligned, ragged-n, tiny, m not multiple of 8
+    CASES = [(16, 4096, 2048), (24, 1000, 512), (6, 130, 2048), (13, 257, 128)]
+
+    @pytest.mark.parametrize("impl", ["interpret", "chunked"])
+    @pytest.mark.parametrize("case", CASES)
+    def test_matches_oracle(self, impl, case):
+        m, n, block = case
+        rng = np.random.default_rng(m * n)
+        s = jnp.asarray(rng.standard_normal((m, n)), F32)
+        want = ref.self_gram(s)
+        got = ops.self_gram(s, impl=impl, block=block)
+        scale = max(1.0, float(jnp.max(jnp.abs(want))))
+        np.testing.assert_allclose(
+            np.asarray(got) / scale, np.asarray(want) / scale,
+            rtol=2e-4, atol=2e-4, err_msg=f"{impl} m={m} n={n}",
+        )
+
+    def test_chunked_f64_is_exact_blocked_sum(self):
+        """The chunked path must keep f64 accumulation (the extraction's
+        1e-10 parity depends on it) — compare against the single GEMM."""
+        rng = np.random.default_rng(7)
+        s = jnp.asarray(rng.standard_normal((10, 5000)))
+        got = ops.self_gram(s, impl="chunked", block=512)
+        want = ref.self_gram(s)
+        assert got.dtype == jnp.float64
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-13, atol=1e-13
+        )
+
+
 # ---------------------------------------------------------------------------
 # 2. flat engine vs the seed pytree loop, on an RBF GP Newton system
 # ---------------------------------------------------------------------------

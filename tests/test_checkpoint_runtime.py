@@ -16,6 +16,9 @@ from repro.checkpoint import CheckpointManager, restore_pytree, save_pytree
 from repro.data import TokenPipeline
 from repro.runtime import Trainer, TrainerConfig
 
+# Multi-run trainer replays (each run recompiles the step): slow tier.
+pytestmark = pytest.mark.slow
+
 
 class TestCheckpoint:
     def test_roundtrip(self, tmp_path):

@@ -147,6 +147,43 @@ class TestDefCG:
         second = mgr.solve(from_matrix(A), b, x0=first.x)
         assert int(second.info.iterations) <= 2
 
+    def test_seeded_basis_without_aw_reuse_aw(self):
+        """Regression: seed(W) with no AW + reuse_aw=True on the first
+        solve must compute AW (nothing to reuse yet), not crash raveling
+        None in the refresh."""
+        A, b, eigs, q = _solve_setup(n=96, cond=1e5, seed=17)
+        k = 8
+        W = pt.basis_from_vectors(
+            [jnp.asarray(q[:, -(i + 1)]) for i in range(k)]
+        )
+        mgr = RecycleManager(k=k, ell=12, tol=1e-8, maxiter=3000)
+        mgr.seed(W)  # a-priori seeding, no A-products
+        res = mgr.solve(from_matrix(A), b, reuse_aw=True)
+        assert bool(res.info.converged)
+        assert mgr.AW is not None
+        # exact top-k deflation: clearly beats fresh CG, and the k AW
+        # matvecs are charged
+        fresh = cg(from_matrix(A), b, tol=1e-8, maxiter=3000)
+        assert int(res.info.iterations) < int(fresh.info.iterations)
+        assert int(res.info.matvecs) == int(res.info.iterations) + 1 + k
+
+    def test_zero_iteration_solve_keeps_basis_state(self):
+        """Regression: a 0-iteration solve (exact x0) records nothing and
+        must leave the manager's basis untouched — in particular a None
+        basis must not become a phantom all-zero basis that gets charged
+        k refresh matvecs on every later system."""
+        A, b, _, _ = _solve_setup(n=48, cond=1e2)
+        x_exact = jnp.linalg.solve(A, b)
+        mgr = RecycleManager(k=4, ell=8, tol=1e-6, maxiter=500)
+        res = mgr.solve(from_matrix(A), b, x0=x_exact)
+        assert int(res.info.iterations) == 0
+        assert mgr.W is None
+        # the next solve runs as a plain first system: no refresh charge
+        res2 = mgr.solve(from_matrix(A), b)
+        plain = defcg(from_matrix(A), b, ell=8, tol=1e-6, maxiter=500)
+        assert int(res2.info.matvecs) == int(plain.info.matvecs)
+        assert mgr.W is not None  # and recycling is bootstrapped now
+
     def test_recycling_drifting_sequence(self):
         # The paper's setting: a slowly drifting SPD sequence — recycling
         # must reduce iterations vs fresh CG on the later systems.
@@ -179,6 +216,37 @@ class TestDefCG:
         b = jnp.array([1.0, 1.0, 1.0])
         res = cg(from_matrix(A), b, tol=1e-12, maxiter=50)
         assert bool(res.info.breakdown) or not bool(res.info.converged)
+
+    def test_fallback_matvec_accounting(self):
+        """Regression: when a poisoned basis forces the clean re-solve,
+        the reported matvecs must be the TRUE total — refresh + failed
+        attempt + fallback — not just the fallback with the discarded
+        basis's refresh cost stapled on."""
+        A, b, _, _ = _solve_setup(n=64, cond=1e4)
+        k, ell, maxiter = 4, 8, 6  # maxiter too small to converge
+        W = random_orthonormal_basis(jax.random.PRNGKey(0), b, k)
+
+        mgr = RecycleManager(k=k, ell=ell, tol=1e-10, maxiter=maxiter)
+        mgr.seed(W)
+        res = mgr.solve(from_matrix(A), b)
+        assert not bool(res.info.converged)  # both attempts hit maxiter
+        assert mgr.W is not None  # fallback still re-bootstrapped a basis
+
+        # Reference costs of the two attempts, run in isolation.
+        AW = pt.basis_map_vectors(from_matrix(A), W)
+        failed = defcg(
+            from_matrix(A), b, W=W, AW=AW, ell=ell,
+            tol=1e-10, maxiter=maxiter, waw_jitter=mgr.waw_jitter,
+        )
+        fallback = defcg(
+            from_matrix(A), b, ell=ell, tol=1e-10, maxiter=maxiter
+        )
+        expected = (
+            k  # refresh of the (discarded) basis — it was still computed
+            + int(failed.info.matvecs)
+            + int(fallback.info.matvecs)
+        )
+        assert int(res.info.matvecs) == expected
 
 
 class TestHarmonicRitz:
