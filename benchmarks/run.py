@@ -10,6 +10,7 @@ Sections:
   fig4     — paper Fig 4 (inducing-point cost/precision)
   micro    — controlled-spectrum κ_eff validation (paper §2.1)
   seq      — sequence engine: extraction+refresh overhead, device scan
+  batch    — multi-tenant solve_batch vs sequential loop (B ∈ {1, 8, 64})
   hf       — Hessian-free recycling at mini-LM scale
   kernel   — fused-kernel micro-benchmarks
   roofline — dry-run derived roofline table (if artifacts exist)
@@ -44,6 +45,7 @@ def main() -> None:
         section_results[name] = common.RESULTS[mark:]
 
     from benchmarks import (
+        batch_bench,
         hf_recycle_bench,
         kernel_bench,
         paper_fig4,
@@ -58,6 +60,7 @@ def main() -> None:
     section("fig4", paper_fig4.run)
     section("micro", solver_microbench.run)
     section("seq", seq_bench.run)
+    section("batch", batch_bench.run)
     section("hf", hf_recycle_bench.run)
     section("kernel", kernel_bench.run)
 

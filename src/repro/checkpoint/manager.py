@@ -9,9 +9,12 @@ and skips unreadable/incomplete ones (corrupt-tail tolerance).
 Elasticity: arrays are stored mesh-agnostically (plain host numpy).  On
 restore, pass ``shardings`` built from the *current* mesh and every array
 is ``device_put`` with its new layout — restoring a 256-chip checkpoint
-onto 512 chips (or onto 1 CPU) is the same call.  The solver recycle
-basis W (optimizer state) rides along like any other pytree, so def-CG's
-"computational transfer learning" state survives preemption too.
+onto 512 chips (or onto 1 CPU) is the same call.  The solver's
+``repro.core.RecycleState`` (optimizer state) rides along like any other
+registered pytree — its stable key names survive the name-manifest check
+— so def-CG's "computational transfer learning" state survives
+preemption too: the first post-restore solve deflates with the recovered
+basis (round-trip tested in ``tests/test_api.py``).
 
 A background-thread async mode overlaps serialization with the next train
 step (``save(..., blocking=False)``); ``wait()`` joins before the next

@@ -1,6 +1,25 @@
 """repro.core — the paper's contribution: recycled Krylov solvers for
-sequences of SPD systems, pytree-native and pjit-shardable."""
+sequences of SPD systems, pytree-native and pjit-shardable.
 
+The public front doors are ``solve`` / ``solve_sequence`` / ``solve_batch``
+driven by one ``SolveSpec`` and carrying a ``RecycleState`` (see
+``core/api.py``); the older entry points (``cg``, ``defcg``,
+``RecycleManager``, ``recycled_solve_jit``) remain as host-side
+conveniences and compatibility shims over the same engine.
+"""
+
+from repro.core.api import (
+    BatchSolveResult,
+    SequenceSolveResult,
+    SolveResult,
+    SolveSpec,
+    make_preconditioner,
+    solve,
+    solve_batch,
+    solve_batch_jit,
+    solve_jit,
+    solve_sequence,
+)
 from repro.core.operators import (
     GGNOperator,
     KernelSystemOperator,
@@ -11,21 +30,26 @@ from repro.core.operators import (
     materialize,
 )
 from repro.core.preconditioners import (
+    JacobiPreconditioner,
+    NystromPreconditioner,
+    WoodburyKernelPreconditioner,
     jacobi,
+    kernel_nystrom_preconditioner,
     nystrom_preconditioner,
     randomized_nystrom,
 )
 from repro.core.recycle import (
     RecycleManager,
+    RecycleState,
     SequenceResult,
     harmonic_ritz,
     harmonic_ritz_flat,
     random_orthonormal_basis,
     recycled_solve_jit,
-    solve_sequence,
     solve_sequence_jit,
 )
 from repro.core.solvers import (
+    DEFAULT_WAW_JITTER,
     CGResult,
     RecycleData,
     SolveInfo,
@@ -36,6 +60,16 @@ from repro.core.solvers import (
 )
 
 __all__ = [
+    "BatchSolveResult",
+    "SequenceSolveResult",
+    "SolveResult",
+    "SolveSpec",
+    "make_preconditioner",
+    "solve",
+    "solve_batch",
+    "solve_batch_jit",
+    "solve_jit",
+    "solve_sequence",
     "GGNOperator",
     "KernelSystemOperator",
     "LinearOperator",
@@ -43,17 +77,22 @@ __all__ = [
     "from_callable",
     "from_matrix",
     "materialize",
+    "JacobiPreconditioner",
+    "NystromPreconditioner",
+    "WoodburyKernelPreconditioner",
     "jacobi",
+    "kernel_nystrom_preconditioner",
     "nystrom_preconditioner",
     "randomized_nystrom",
     "RecycleManager",
+    "RecycleState",
     "SequenceResult",
     "harmonic_ritz",
     "harmonic_ritz_flat",
     "random_orthonormal_basis",
     "recycled_solve_jit",
-    "solve_sequence",
     "solve_sequence_jit",
+    "DEFAULT_WAW_JITTER",
     "CGResult",
     "RecycleData",
     "SolveInfo",

@@ -1,0 +1,559 @@
+"""One front door for every solve: ``SolveSpec`` + ``RecycleState``.
+
+The paper's pitch is interpolating between a-priori low-rank approximations
+(preconditioners) and exact solves (deflation/recycling) — Soodhalter et
+al.'s recycling survey treats the two as one composable projection
+framework.  Before this module, only plain ``cg`` accepted a
+preconditioner, and five entry points each re-declared overlapping kwargs
+with drifting defaults.  This module makes the combination declarative:
+
+* :class:`SolveSpec` — a frozen, hashable description of *how* to solve
+  (method, deflation sizes, tolerances, preconditioner strategy).  It is
+  the single source of truth for solver configuration: every default
+  (``waw_jitter`` included) lives here or in the constant it re-exports,
+  and the spec passes through ``jit`` as a static argument.
+* :class:`RecycleState` (re-exported from :mod:`repro.core.recycle`) — the
+  *what is carried between solves*: flat ``(k, n)`` recycled basis, its
+  A-products, Ritz values, and a solve counter.  A registered pytree, so
+  it checkpoints, shards, and vmaps over a leading tenant axis.
+
+Front doors (everything else is a compatibility shim over these):
+
+* :func:`solve` — one system.  ``solve(A, b, spec, state) -> SolveResult``
+  runs (preconditioned) CG or def-CG, refreshes ``AW`` per the spec, and
+  returns the next ``RecycleState``.  Fully traceable: no host syncs, so
+  it jits (``solve_jit``), vmaps, and pjit-shards.
+* :func:`solve_sequence` — N related systems as ONE ``lax.scan`` (the
+  device-resident sequence engine), now spec-driven and preconditionable.
+  Legacy ``(W0, AW0, k=, ell=)`` calls are forwarded with a
+  ``DeprecationWarning``.
+* :func:`solve_batch` — B independent tenants (systems or sequences)
+  under one ``vmap``: one compiled program serves every tenant, each with
+  its own ``RecycleState`` and convergence flag (``info.converged`` is
+  the per-tenant mask).  This is the serving shape for many users'
+  GP/Laplace problems at once.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import preconditioners as precond_mod
+from repro.core import pytree as pt
+from repro.core import recycle as recycle_mod
+from repro.core import solvers as solvers_mod
+from repro.core.recycle import RecycleState, SequenceResult
+from repro.core.solvers import DEFAULT_WAW_JITTER, SolveInfo
+
+Pytree = Any
+
+_METHODS = ("cg", "defcg")
+_SELECTS = ("largest", "smallest")
+_REFRESH_MODES = ("exact", "stale")
+_PRECONDS = ("none", "jacobi", "nystrom", "custom")
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveSpec:
+    """Declarative solver configuration — the single source of truth.
+
+    Frozen and hashable, so it rides through ``jit`` as ONE static
+    argument instead of a dozen drifting kwargs.  Field semantics:
+
+    Attributes:
+      method: ``"cg"`` (no deflation; ``k``/``ell`` ignored) or
+        ``"defcg"`` (deflated CG with harmonic-Ritz recycling).
+      k: recycled subspace size (rows of ``RecycleState.W``).
+      ell: leading ``(p, Ap)`` pairs recorded per solve for extraction.
+      tol, atol, maxiter: convergence controls — stop when
+        ``‖r‖ ≤ max(tol·‖b‖, atol)``.
+      select: which end of the spectrum the extraction keeps
+        (``"largest"`` deflates the top — right for ``A = I + H½KH½``).
+      waw_jitter: relative diagonal jitter for the k×k ``WᵀAW`` Cholesky.
+        The one shared default is
+        :data:`repro.core.solvers.DEFAULT_WAW_JITTER`; keep it small
+        (≳1e-8 measurably destabilizes def-CG — see ``solvers.defcg``).
+      refresh_aw: ``"exact"`` — recompute ``AW`` per system (k matvecs,
+        one fused multi-RHS pass); ``"stale"`` — reuse extraction
+        products (zero matvecs, the paper's cheap mode; exact only for an
+        unchanged operator).
+      precond: preconditioner strategy — ``"none"``, ``"jacobi"``
+        (diagonal), ``"nystrom"`` (randomized eigensketch), or
+        ``"custom"`` (caller passes any SPD apply as ``M``).  Strategies
+        other than ``"none"`` need operator data; build the apply with
+        :func:`make_preconditioner` and pass it as ``M``.
+      precond_rank: sketch rank for ``"nystrom"``.
+      precond_sigma: bulk shift σ for the Nyström formula.
+    """
+
+    method: str = "defcg"
+    k: int = 8
+    ell: int = 12
+    tol: float = 1e-5
+    atol: float = 0.0
+    maxiter: int = 1000
+    select: str = "largest"
+    waw_jitter: float = DEFAULT_WAW_JITTER
+    refresh_aw: str = "exact"
+    precond: str = "none"
+    precond_rank: int = 16
+    precond_sigma: float = 1.0
+
+    def __post_init__(self):
+        if self.method not in _METHODS:
+            raise ValueError(f"method must be one of {_METHODS}, got {self.method!r}")
+        if self.select not in _SELECTS:
+            raise ValueError(f"select must be one of {_SELECTS}, got {self.select!r}")
+        if self.refresh_aw not in _REFRESH_MODES:
+            raise ValueError(
+                f"refresh_aw must be one of {_REFRESH_MODES}, got {self.refresh_aw!r}"
+            )
+        if self.precond not in _PRECONDS:
+            raise ValueError(
+                f"precond must be one of {_PRECONDS}, got {self.precond!r}"
+            )
+        if self.method == "defcg" and self.k < 1:
+            raise ValueError(f"defcg needs k >= 1, got k={self.k}")
+        if self.ell < 0 or self.maxiter < 1 or self.precond_rank < 1:
+            raise ValueError("ell >= 0, maxiter >= 1, precond_rank >= 1 required")
+        if self.tol < 0 or self.atol < 0 or self.waw_jitter < 0:
+            raise ValueError("tol, atol and waw_jitter must be non-negative")
+
+
+class SolveResult(NamedTuple):
+    """What :func:`solve` returns: solution, diagnostics, next state."""
+
+    x: Pytree
+    info: SolveInfo
+    state: Optional[RecycleState]
+
+
+class SequenceSolveResult(NamedTuple):
+    """Per-system stacked outputs of :func:`solve_sequence` + final state."""
+
+    x: Pytree  # (num_systems, …) solutions
+    info: SolveInfo  # stacked diagnostics
+    theta: jnp.ndarray  # (num_systems, k) Ritz-value trace
+    state: RecycleState  # final state, ready to seed the next call
+
+
+class BatchSolveResult(NamedTuple):
+    """Per-tenant stacked outputs of :func:`solve_batch` (leading axis B).
+
+    ``info.converged`` is the per-tenant convergence mask.
+    """
+
+    x: Pytree
+    info: SolveInfo
+    state: Optional[RecycleState]
+
+
+def make_preconditioner(
+    A,
+    spec: SolveSpec,
+    template: Pytree,
+    *,
+    diag: Optional[Pytree] = None,
+    key=None,
+):
+    """Build the ``M`` apply for ``spec.precond`` (None for ``"none"``).
+
+    ``"jacobi"`` needs ``diag`` (the operator diagonal as a vector
+    pytree); ``"nystrom"`` needs ``key`` and spends
+    ``spec.precond_rank + 8`` matvecs on the sketch — an a-priori cost
+    that amortizes across every solve that reuses the returned apply.
+    The result is a registered pytree node, so the jitted front doors
+    treat it as traced data (rebuilding it per system reuses one
+    compiled solve).
+    """
+    if spec.precond == "none":
+        return None
+    if spec.precond == "jacobi":
+        if diag is None:
+            raise ValueError("precond='jacobi' needs diag=<operator diagonal>")
+        return precond_mod.jacobi(diag)
+    if spec.precond == "nystrom":
+        if key is None:
+            raise ValueError("precond='nystrom' needs key=<PRNG key>")
+        U, lam = precond_mod.randomized_nystrom(
+            A, template, rank=spec.precond_rank, key=key
+        )
+        return precond_mod.nystrom_preconditioner(U, lam, spec.precond_sigma)
+    raise ValueError(
+        "precond='custom' supplies its own apply — pass it as M instead"
+    )
+
+
+def _check_m(spec: SolveSpec, M) -> None:
+    if spec.precond not in ("none",) and M is None:
+        raise ValueError(
+            f"spec.precond={spec.precond!r} but no M was passed — build one "
+            "with repro.core.make_preconditioner(A, spec, template, ...)"
+        )
+
+
+# ---------------------------------------------------------------------------
+# solve — one system
+# ---------------------------------------------------------------------------
+
+
+def solve(
+    A,
+    b: Pytree,
+    spec: Optional[SolveSpec] = None,
+    state: Optional[RecycleState] = None,
+    *,
+    x0: Optional[Pytree] = None,
+    M=None,
+    record_residuals: bool = False,
+) -> SolveResult:
+    """Solve one SPD system ``A x = b`` per ``spec``, carrying ``state``.
+
+    The single-system front door: (preconditioned) CG or def-CG on the
+    flat engine.  For ``method="defcg"`` the returned ``state`` holds the
+    harmonic-Ritz basis extracted from this solve — feed it back in for
+    the next related system.  ``state=None`` bootstraps cold (an all-zero
+    basis deflates as an exact no-op, so the first solve is plain CG plus
+    recording).  Fully traceable — no host syncs — so this function jits
+    (:data:`solve_jit`), vmaps (:func:`solve_batch`), and shards.
+
+    ``M`` is the preconditioner apply for ``spec.precond`` (see
+    :func:`make_preconditioner`); deflation composes with it through the
+    split-preconditioned iteration of :func:`repro.core.solvers.defcg`.
+
+    ``method="cg"`` neither consumes nor updates recycle state: a
+    supplied ``state`` passes through UNTOUCHED (not validated, counter
+    not bumped) so a mixed cg/defcg pipeline can thread one state
+    through both.
+
+    Accounting: ``info.matvecs`` includes the per-solve ``AW`` refresh
+    (k operator applications when the state carries a basis and
+    ``refresh_aw="exact"``), matching :func:`solve_sequence`.
+    """
+    spec = SolveSpec() if spec is None else spec
+    _check_m(spec, M)
+
+    if spec.method == "cg":
+        res = solvers_mod.cg(
+            A,
+            b,
+            x0,
+            tol=spec.tol,
+            atol=spec.atol,
+            maxiter=spec.maxiter,
+            M=M,
+            record_residuals=record_residuals,
+        )
+        return SolveResult(x=res.x, info=res.info, state=state)
+
+    b_flat, unravel = pt.ravel_vector(b)
+    n = b_flat.shape[0]
+    if state is None:
+        state = RecycleState.zeros(spec.k, n, b_flat.dtype)
+    if state.W.ndim != 2 or state.W.shape != (spec.k, n):
+        raise ValueError(
+            f"state.W has shape {state.W.shape}; spec(k={spec.k}) over this "
+            f"system needs ({spec.k}, {n}) — state and spec must agree"
+        )
+
+    # Per-system semantics (refresh, accounting, extraction) are shared
+    # with solve_sequence's scan body — ONE implementation, no drift.
+    result, info, w2, aw2, theta = recycle_mod._one_recycled_solve(
+        A,
+        b,
+        x0,
+        state.W,
+        state.AW,
+        unravel,
+        k=spec.k,
+        ell=spec.ell,
+        tol=spec.tol,
+        atol=spec.atol,
+        maxiter=spec.maxiter,
+        select=spec.select,
+        waw_jitter=spec.waw_jitter,
+        refresh_aw=spec.refresh_aw,
+        M=M,
+        record_residuals=record_residuals,
+    )
+    new_state = RecycleState(
+        W=w2,
+        AW=aw2,
+        # ell == 0 records nothing — carry the previous Ritz values.
+        theta=state.theta if theta is None else theta,
+        systems_solved=state.systems_solved + 1,
+    )
+    return SolveResult(x=result.x, info=info, state=new_state)
+
+
+solve_jit = jax.jit(solve, static_argnames=("spec", "record_residuals"))
+
+
+# ---------------------------------------------------------------------------
+# solve_sequence — N related systems, one lax.scan
+# ---------------------------------------------------------------------------
+
+
+def _solve_sequence_spec(
+    systems: Any,
+    b_seq: Pytree,
+    spec: SolveSpec,
+    state0: Optional[RecycleState],
+    *,
+    make_operator: Optional[Callable[[Any], Any]] = None,
+    make_preconditioner: Optional[Callable[[Any], Any]] = None,
+    carry_x: bool = False,
+) -> SequenceSolveResult:
+    if spec.method != "defcg":
+        raise ValueError(
+            "solve_sequence recycles a deflation basis — it needs "
+            f"spec.method='defcg', got {spec.method!r} (for plain CG over "
+            "independent systems use solve_batch)"
+        )
+    if spec.precond != "none" and make_preconditioner is None:
+        raise ValueError(
+            f"spec.precond={spec.precond!r} but no make_preconditioner was "
+            "passed — the sequence path builds M per system, so supply a "
+            "factory mapping each operator to its preconditioner apply"
+        )
+    seq = recycle_mod.solve_sequence(
+        systems,
+        b_seq,
+        state0.W if state0 is not None else None,
+        state0.AW if state0 is not None else None,
+        k=spec.k,
+        ell=spec.ell,
+        make_operator=make_operator,
+        make_preconditioner=make_preconditioner,
+        tol=spec.tol,
+        atol=spec.atol,
+        maxiter=spec.maxiter,
+        select=spec.select,
+        waw_jitter=spec.waw_jitter,
+        refresh_aw=spec.refresh_aw,
+        carry_x=carry_x,
+    )
+    num_systems = jax.tree_util.tree_leaves(b_seq)[0].shape[0]
+    solved0 = (
+        state0.systems_solved if state0 is not None else jnp.int32(0)
+    )
+    if seq.theta is not None:
+        theta = seq.theta[-1]
+    elif state0 is not None:
+        # ell == 0 records nothing — carry the previous Ritz values.
+        theta = state0.theta
+    else:
+        theta = jnp.zeros((spec.k,), seq.W.dtype)
+    state = RecycleState(
+        W=seq.W,
+        AW=seq.AW,
+        theta=theta,
+        systems_solved=solved0 + num_systems,
+    )
+    return SequenceSolveResult(
+        x=seq.x, info=seq.info, theta=seq.theta, state=state
+    )
+
+
+def solve_sequence(
+    systems: Any,
+    b_seq: Pytree,
+    spec: Optional[SolveSpec] = None,
+    state0: Optional[RecycleState] = None,
+    *,
+    make_operator: Optional[Callable[[Any], Any]] = None,
+    make_preconditioner: Optional[Callable[[Any], Any]] = None,
+    carry_x: bool = False,
+    **legacy,
+):
+    """Solve a sequence of related SPD systems on-device, spec-driven.
+
+    ``solve_sequence(systems, b_seq, spec, state0)`` is the front door:
+    one ``lax.scan`` carries the :class:`RecycleState` across systems
+    (zero host syncs; see :func:`repro.core.recycle.solve_sequence` for
+    the engine internals), returns a :class:`SequenceSolveResult` whose
+    ``state`` seeds the next call.  ``make_preconditioner`` maps each
+    per-system operator to its ``M`` apply, so the whole scan runs
+    Nyström/Jacobi-preconditioned def-CG.
+
+    Legacy calls — ``solve_sequence(systems, b_seq, W0, AW0, k=…,
+    ell=…, …)`` — are forwarded to the engine unchanged (same
+    ``SequenceResult`` return) with a ``DeprecationWarning``.
+    """
+    if isinstance(spec, SolveSpec) or (spec is None and not legacy):
+        if legacy:
+            raise TypeError(
+                f"unexpected keyword arguments with a SolveSpec: "
+                f"{sorted(legacy)} — fold them into the spec"
+            )
+        return _solve_sequence_spec(
+            systems,
+            b_seq,
+            SolveSpec() if spec is None else spec,
+            state0,
+            make_operator=make_operator,
+            make_preconditioner=make_preconditioner,
+            carry_x=carry_x,
+        )
+    # Legacy signature: (systems, b_seq, W0, AW0, *, k, ell, ...) — W0/AW0
+    # may arrive positionally (in the spec/state0 slots) or by keyword.
+    warnings.warn(
+        "solve_sequence(systems, b, W0, AW0, k=..., ell=...) is deprecated; "
+        "use solve_sequence(systems, b, SolveSpec(k=..., ell=...), state0)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    w0 = legacy.pop("W0", spec)
+    aw0 = legacy.pop("AW0", state0)
+    return recycle_mod.solve_sequence(
+        systems,
+        b_seq,
+        w0,
+        aw0,
+        make_operator=make_operator,
+        make_preconditioner=make_preconditioner,
+        carry_x=carry_x,
+        **legacy,
+    )
+
+
+# ---------------------------------------------------------------------------
+# solve_batch — B independent tenants, one vmap, one XLA computation
+# ---------------------------------------------------------------------------
+
+
+def solve_batch(
+    systems: Any,
+    b_batch: Pytree,
+    spec: Optional[SolveSpec] = None,
+    state: Optional[RecycleState] = None,
+    *,
+    make_operator: Optional[Callable[[Any], Any]] = None,
+    make_preconditioner: Optional[Callable[[Any], Any]] = None,
+    sequence: bool = False,
+    carry_x: bool = False,
+) -> BatchSolveResult:
+    """Solve B independent systems (or sequences) in ONE compiled program.
+
+    The multi-tenant serving shape: ``vmap`` lifts the flat def-CG engine
+    over a leading tenant axis, so B users' GP/Laplace solves share one
+    XLA computation — per-tenant ``RecycleState`` (leading axis B),
+    per-tenant convergence masks (``info.converged``), no host syncs.
+    Under ``vmap`` the while-loop runs until the *slowest* tenant
+    converges; finished tenants' carries are masked frozen, so every
+    tenant's answer matches its sequential :func:`solve` bit-for-bit.
+
+    Args:
+      systems: per-tenant operator data with a leading B axis on every
+        traced leaf — a stacked operator pytree (e.g. one
+        ``KernelSystemOperator`` whose ``sqrt_h`` is ``(B, n)``: B tenants
+        sharing one kernel) consumed directly, or raw data mapped through
+        ``make_operator``.  With ``sequence=True`` each leaf carries
+        ``(B, N, …)``: B tenants × N systems each.
+      b_batch: stacked right-hand sides, leading axis B (``(B, N, …)``
+        with ``sequence=True``).
+      state: batched :class:`RecycleState` (leading axis B on every
+        leaf), e.g. a previous call's output.  ``None`` bootstraps every
+        tenant cold.
+      make_preconditioner: per-tenant operator → ``M`` apply factory
+        (stable callable), as in :func:`solve_sequence`.
+      sequence: treat each tenant as a *sequence* of N related systems
+        (vmapped :func:`solve_sequence`) instead of a single system.
+      carry_x: warm-start within each tenant's sequence
+        (``sequence=True`` only).
+
+    Returns a :class:`BatchSolveResult`; with ``sequence=True`` its
+    ``x``/``info`` carry axes ``(B, N, …)`` and ``state`` is the B final
+    per-tenant states.
+    """
+    spec = SolveSpec() if spec is None else spec
+    make_op = make_operator if make_operator is not None else (lambda s: s)
+
+    if sequence:
+        if spec.method != "defcg":
+            raise ValueError("sequence=True requires spec.method='defcg'")
+
+        def one_seq(sys_i, b_i, st_i):
+            res = _solve_sequence_spec(
+                sys_i,
+                b_i,
+                spec,
+                st_i,
+                make_operator=make_operator,
+                make_preconditioner=make_preconditioner,
+                carry_x=carry_x,
+            )
+            return res.x, res.info, res.state
+
+        if state is None:
+            state = _batched_zero_state(b_batch, spec, axes=2)
+        x, info, state_out = jax.vmap(one_seq)(systems, b_batch, state)
+        return BatchSolveResult(x=x, info=info, state=state_out)
+
+    if spec.method == "cg":
+
+        def one_cg(sys_i, b_i):
+            A = make_op(sys_i)
+            M = (
+                make_preconditioner(A)
+                if make_preconditioner is not None
+                else None
+            )
+            res = solve(A, b_i, spec, None, M=M)
+            return res.x, res.info
+
+        # Plain CG neither consumes nor updates recycle state — a
+        # caller-supplied batched state passes through untouched (same
+        # contract as solve()).
+        x, info = jax.vmap(one_cg)(systems, b_batch)
+        return BatchSolveResult(x=x, info=info, state=state)
+
+    def one(sys_i, b_i, st_i):
+        A = make_op(sys_i)
+        M = (
+            make_preconditioner(A)
+            if make_preconditioner is not None
+            else None
+        )
+        res = solve(A, b_i, spec, st_i, M=M)
+        return res.x, res.info, res.state
+
+    if state is None:
+        state = _batched_zero_state(b_batch, spec, axes=1)
+    x, info, state_out = jax.vmap(one)(systems, b_batch, state)
+    return BatchSolveResult(x=x, info=info, state=state_out)
+
+
+def _batched_zero_state(
+    b_batch: Pytree, spec: SolveSpec, axes: int
+) -> RecycleState:
+    """Cold per-tenant states: leading B axis over RecycleState.zeros."""
+    leaves = jax.tree_util.tree_leaves(b_batch)
+    B = leaves[0].shape[0]
+    b0 = jax.tree_util.tree_map(lambda l: l[(0,) * axes], b_batch)
+    b0_flat, _ = pt.ravel_vector(b0)
+    n = b0_flat.shape[0]
+    dtype = b0_flat.dtype
+    return RecycleState(
+        W=jnp.zeros((B, spec.k, n), dtype),
+        AW=jnp.zeros((B, spec.k, n), dtype),
+        theta=jnp.zeros((B, spec.k), dtype),
+        systems_solved=jnp.zeros((B,), jnp.int32),
+    )
+
+
+solve_batch_jit = jax.jit(
+    solve_batch,
+    static_argnames=(
+        "spec",
+        "make_operator",
+        "make_preconditioner",
+        "sequence",
+        "carry_x",
+    ),
+)

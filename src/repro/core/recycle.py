@@ -47,10 +47,71 @@ import jax.numpy as jnp
 
 from repro.core import operators as ops_mod
 from repro.core import pytree as pt
-from repro.core.solvers import CGResult, SolveInfo, defcg, defcg_jit
+from repro.core.solvers import (
+    DEFAULT_WAW_JITTER,
+    CGResult,
+    SolveInfo,
+    defcg,
+    defcg_jit,
+)
 from repro.kernels import ops as kops
 
 Pytree = Any
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass
+class RecycleState:
+    """First-class recycled-subspace state — the carry of every solve path.
+
+    Replaces the bare ``(W, AW)`` pairs previously threaded through
+    ``RecycleManager``, ``recycled_solve_jit``, ``hf_step`` and
+    ``solve_sequence``'s scan carry.  A registered pytree node (with
+    stable key names, so it round-trips through ``repro.checkpoint``
+    by leaf path), it vmaps over a leading tenant axis (``solve_batch``)
+    and shards like the solution vector under pjit.
+
+    Attributes:
+      W: flat ``(k, n)`` recycled basis rows.  Zero rows are empty slots
+        (cold bootstrap / clamped extraction) — def-CG deflates them as
+        exact no-ops, so an all-zero state is a valid "no recycling yet".
+      AW: ``(k, n)`` A-products of ``W`` under the operator that produced
+        them (stale until the next refresh).
+      theta: ``(k,)`` harmonic Ritz values (0 = clamped slot).
+      systems_solved: int32 scalar — how many solves fed this state.
+    """
+
+    W: jnp.ndarray
+    AW: jnp.ndarray
+    theta: jnp.ndarray
+    systems_solved: jnp.ndarray
+
+    @classmethod
+    def zeros(cls, k: int, n: int, dtype=jnp.float32) -> "RecycleState":
+        """A cold (empty) state: the first solve runs plain CG + record."""
+        return cls(
+            W=jnp.zeros((k, n), dtype),
+            AW=jnp.zeros((k, n), dtype),
+            theta=jnp.zeros((k,), dtype),
+            systems_solved=jnp.int32(0),
+        )
+
+    def tree_flatten_with_keys(self):
+        ga = jax.tree_util.GetAttrKey
+        return (
+            (
+                (ga("W"), self.W),
+                (ga("AW"), self.AW),
+                (ga("theta"), self.theta),
+                (ga("systems_solved"), self.systems_solved),
+            ),
+            None,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
 
 
 def _select_positive_ritz(zeta, Wm, k: int, select: str):
@@ -281,6 +342,88 @@ def _apply_basis_flat(A, unravel, w_flat: jnp.ndarray) -> jnp.ndarray:
     return pt.ravel_basis(ops_mod.apply_to_basis(A, basis))
 
 
+def _one_recycled_solve(
+    A,
+    b: Pytree,
+    x0: Optional[Pytree],
+    w: jnp.ndarray,
+    aw_carry: jnp.ndarray,
+    unravel,
+    *,
+    k: int,
+    ell: int,
+    tol: float,
+    atol: float,
+    maxiter: int,
+    select: str,
+    waw_jitter: float,
+    refresh_aw: str,
+    M=None,
+    record_residuals: bool = False,
+):
+    """ONE system of the recycled def-CG step, on flat state.
+
+    The single source of truth for per-system semantics — refresh
+    (cold-bootstrap ``A @ 0`` skip), solve, matvec accounting, and the
+    masked extraction — shared by the front-door :func:`repro.core.solve`
+    and by :func:`solve_sequence`'s scan body, so the single-system and
+    scan paths cannot drift apart.
+
+    Returns ``(result, info, w_next, aw_next, theta)``; ``theta`` is
+    ``None`` when ``ell == 0`` (nothing recorded — callers carry their
+    previous Ritz values).
+    """
+    if refresh_aw == "exact":
+        # Cold bootstrap (all-zero W): A @ 0 = 0 — skip the k operator
+        # passes and their accounting.
+        has_w = jnp.any(w != 0)
+        aw_used = jax.lax.cond(
+            has_w,
+            lambda ww: _apply_basis_flat(A, unravel, ww),
+            jnp.zeros_like,
+            w,
+        )
+    else:
+        aw_used = aw_carry
+    result = defcg(
+        A,
+        b,
+        x0,
+        W=w,
+        AW=aw_used,
+        ell=ell,
+        tol=tol,
+        atol=atol,
+        maxiter=maxiter,
+        record_residuals=record_residuals,
+        waw_jitter=waw_jitter,
+        exact_aw=(refresh_aw == "exact"),
+        flat_recycle=True,
+        M=M,
+    )
+    info = result.info
+    if refresh_aw == "exact":
+        # The multi-RHS refresh is one fused pass but k matvecs of
+        # operator work — the §2.2 overhead term, reported honestly
+        # (zero on a cold bootstrap, where it was skipped).
+        info = info._replace(
+            matvecs=info.matvecs + k * has_w.astype(info.matvecs.dtype)
+        )
+    if ell > 0:
+        w_next, aw_next, theta = _extract_next_basis(
+            w,
+            aw_used,
+            result.recycle.P,
+            result.recycle.AP,
+            result.recycle.stored,
+            k,
+            select=select,
+        )
+    else:
+        w_next, aw_next, theta = w, aw_used, None
+    return result, info, w_next, aw_next, theta
+
+
 # ---------------------------------------------------------------------------
 # The device-resident sequence engine
 # ---------------------------------------------------------------------------
@@ -305,10 +448,12 @@ def solve_sequence(
     k: int,
     ell: int,
     make_operator: Optional[Callable[[Any], Any]] = None,
+    make_preconditioner: Optional[Callable[[Any], Any]] = None,
     tol: float = 1e-5,
+    atol: float = 0.0,
     maxiter: int = 1000,
     select: str = "largest",
-    waw_jitter: float = 1e-12,
+    waw_jitter: float = DEFAULT_WAW_JITTER,
     refresh_aw: str = "exact",
     carry_x: bool = False,
 ) -> SequenceResult:
@@ -335,6 +480,11 @@ def solve_sequence(
       make_operator: maps one system slice to an SPD operator
         (``None`` → the slice *is* the operator).  Must be a stable
         callable for jit caching.
+      make_preconditioner: optional stable callable mapping the per-system
+        operator to an SPD preconditioner apply ``M`` (``None`` → no
+        preconditioning).  Every solve in the scan then runs the
+        split-preconditioned def-CG (see :func:`repro.core.solvers.defcg`)
+        — deflation and preconditioning compose.
       refresh_aw: ``"exact"`` — recompute ``A⁽ⁱ⁾W`` per system with one
         multi-RHS pass (k matvecs of accounted cost); ``"stale"`` — reuse
         the extraction's ``AW`` (zero matvecs, approximate deflation, the
@@ -376,49 +526,30 @@ def solve_sequence(
         w, aw, x_prev = carry
         sys_i, b = xs
         A = make_op(sys_i)
-        if refresh_aw == "exact":
-            # Cold bootstrap (all-zero W, only system 1 with W0=None):
-            # A @ 0 = 0 — skip the k operator passes and their accounting.
-            has_w = jnp.any(w != 0)
-            aw_used = jax.lax.cond(
-                has_w,
-                lambda ww: _apply_basis_flat(A, unravel, ww),
-                jnp.zeros_like,
-                w,
-            )
-        else:
-            aw_used = aw
         x0 = unravel(x_prev) if carry_x else None
-        result = defcg(
+        # Per-system semantics (refresh, accounting, extraction) live in
+        # ONE place, shared with the single-system front door.
+        result, info, w2, aw2, theta = _one_recycled_solve(
             A,
             b,
             x0,
-            W=w,
-            AW=aw_used,
+            w,
+            aw,
+            unravel,
+            k=k,
             ell=ell,
             tol=tol,
+            atol=atol,
             maxiter=maxiter,
-            waw_jitter=waw_jitter,
-            exact_aw=(refresh_aw == "exact"),
-            flat_recycle=True,
-        )
-        w2, aw2, theta = _extract_next_basis(
-            w,
-            aw_used,
-            result.recycle.P,
-            result.recycle.AP,
-            result.recycle.stored,
-            k,
             select=select,
+            waw_jitter=waw_jitter,
+            refresh_aw=refresh_aw,
+            M=(
+                make_preconditioner(A)
+                if make_preconditioner is not None
+                else None
+            ),
         )
-        info = result.info
-        if refresh_aw == "exact":
-            # The multi-RHS refresh is one fused pass but k matvecs of
-            # operator work — the §2.2 overhead term, reported honestly
-            # (zero on the cold bootstrap system, where it was skipped).
-            info = info._replace(
-                matvecs=info.matvecs + k * has_w.astype(info.matvecs.dtype)
-            )
         x_flat = pt.ravel(result.x)
         return (w2, aw2, x_flat), (result.x, info, theta)
 
@@ -436,7 +567,9 @@ solve_sequence_jit = jax.jit(
         "k",
         "ell",
         "make_operator",
+        "make_preconditioner",
         "tol",
+        "atol",
         "maxiter",
         "select",
         "waw_jitter",
@@ -496,9 +629,10 @@ class RecycleManager:
     ``reuse_aw=True`` on a call additionally declares the operator
     unchanged since the previous solve (multiple RHS against one matrix).
 
-    The manager state (W, AW) is an ordinary pytree of device arrays: it
-    shards like the solution vector, persists on-device across systems, and
-    is checkpointable (``repro.checkpoint`` saves it with the train state).
+    The manager carries a :class:`RecycleState` (flat ``(k, n)`` device
+    arrays): it shards like the solution vector, persists on-device across
+    systems, and is checkpointable (``repro.checkpoint`` saves it with the
+    train state).  ``W``/``AW``/``theta`` remain readable as properties.
     """
 
     k: int
@@ -506,19 +640,68 @@ class RecycleManager:
     select: str = "largest"
     tol: float = 1e-5
     maxiter: int = 1000
-    waw_jitter: float = 1e-12
+    waw_jitter: float = DEFAULT_WAW_JITTER
     refresh_aw: str = "exact"  # "exact" | "stale" (see class docstring)
     use_jit: bool = True
-    W: Optional[Pytree] = None
-    AW: Optional[Pytree] = None
-    theta: Optional[jnp.ndarray] = None
+    state: Optional[RecycleState] = None
     systems_solved: int = 0
+    _has_aw: bool = False  # state.AW holds real A-products (not placeholder)
+
+    @property
+    def W(self) -> Optional[jnp.ndarray]:
+        """Flat ``(m, n)`` recycled basis rows, or None before bootstrap."""
+        return None if self.state is None else self.state.W
+
+    @property
+    def AW(self) -> Optional[jnp.ndarray]:
+        """A-products of ``W`` (None when seeded without them)."""
+        if self.state is None or not self._has_aw:
+            return None
+        return self.state.AW
+
+    @property
+    def theta(self) -> Optional[jnp.ndarray]:
+        return None if self.state is None else self.state.theta
 
     def seed(self, W: Pytree, AW: Optional[Pytree] = None) -> None:
         """Seed the recycle space a priori (e.g. Nyström vectors — the
-        paper's §1.1 'guessed projective space as first initialization')."""
-        self.W = W
-        self.AW = AW
+        paper's §1.1 'guessed projective space as first initialization').
+
+        ``W`` is a stacked basis (pytree or flat ``(m, n)``) of at most
+        ``self.k`` vectors; shape/k-consistency is validated HERE, with a
+        host-side error, instead of surfacing as an XLA shape failure in
+        the middle of the next solve.
+        """
+        w_flat = pt.ravel_basis(W)
+        m = w_flat.shape[0]
+        if not 1 <= m <= self.k:
+            raise ValueError(
+                f"seed basis has {m} vectors; RecycleManager(k={self.k}) "
+                f"can carry between 1 and {self.k}"
+            )
+        aw_flat = None
+        if AW is not None:
+            if jax.tree_util.tree_structure(
+                AW
+            ) != jax.tree_util.tree_structure(W):
+                raise ValueError(
+                    "seed AW must have the same pytree structure as W, got "
+                    f"{jax.tree_util.tree_structure(AW)} vs "
+                    f"{jax.tree_util.tree_structure(W)}"
+                )
+            aw_flat = pt.ravel_basis(AW)
+            if aw_flat.shape != w_flat.shape:
+                raise ValueError(
+                    f"seed AW shape {aw_flat.shape} does not match W "
+                    f"shape {w_flat.shape}"
+                )
+        self.state = RecycleState(
+            W=w_flat,
+            AW=jnp.zeros_like(w_flat) if aw_flat is None else aw_flat,
+            theta=jnp.zeros((m,), w_flat.dtype),
+            systems_solved=jnp.int32(self.systems_solved),
+        )
+        self._has_aw = aw_flat is not None
 
     def solve(
         self,
@@ -530,43 +713,49 @@ class RecycleManager:
         tol: Optional[float] = None,
         maxiter: Optional[int] = None,
         record_residuals: bool = False,
+        M=None,
     ) -> CGResult:
         tol = self.tol if tol is None else tol
         maxiter = self.maxiter if maxiter is None else maxiter
 
-        AW = self.AW
+        w_flat = self.state.W if self.state is not None else None
+        aw_flat = self.AW  # None when seeded without A-products
         # A basis with no A-products at all (seed() without AW) must be
         # refreshed even under reuse_aw — there is nothing to reuse.
-        needs_fresh = self.W is not None and (
-            AW is None or (not reuse_aw and self.refresh_aw == "exact")
+        needs_fresh = w_flat is not None and (
+            aw_flat is None or (not reuse_aw and self.refresh_aw == "exact")
         )
         if needs_fresh:
-            AW = (
-                _apply_basis_maybe_jit(A, self.W)
+            _, unravel = pt.ravel_vector(b)
+            basis = pt.unravel_basis(w_flat, unravel)
+            aw = (
+                _apply_basis_maybe_jit(A, basis)
                 if self.use_jit
-                else ops_mod.apply_to_basis(A, self.W)
+                else ops_mod.apply_to_basis(A, basis)
             )
+            aw_flat = pt.ravel_basis(aw)
 
         solve_fn = defcg_jit if self.use_jit else defcg
         result = solve_fn(
             A,
             b,
             x0,
-            W=self.W,
-            AW=AW,
+            W=w_flat,
+            AW=aw_flat,
             ell=self.ell,
             tol=tol,
             maxiter=maxiter,
             record_residuals=record_residuals,
             waw_jitter=self.waw_jitter,
-            exact_aw=needs_fresh or reuse_aw or self.W is None,
+            exact_aw=needs_fresh or reuse_aw or w_flat is None,
             flat_recycle=True,  # _refresh consumes (P, AP) flat
+            M=M,
         )
         # Charge what the refresh actually computed: a seeded basis may
         # hold fewer than self.k vectors.
-        refresh_cost = pt.basis_size(self.W) if needs_fresh else 0
+        refresh_cost = w_flat.shape[0] if needs_fresh else 0
 
-        if self.W is not None and (
+        if w_flat is not None and (
             bool(result.info.breakdown) or not bool(result.info.converged)
         ):
             # Resilience: a stale/ill-conditioned basis can poison the
@@ -576,13 +765,15 @@ class RecycleManager:
             # discarded basis) were still paid — fold them into the
             # reported total rather than silently dropping them.
             failed_matvecs = result.info.matvecs
-            self.W = self.AW = self.theta = None
-            AW = None
+            self.state = None
+            self._has_aw = False
+            w_flat = aw_flat = None
             result = solve_fn(
                 A, b, x0,
                 ell=self.ell, tol=tol, maxiter=maxiter,
                 record_residuals=record_residuals,
                 flat_recycle=True,
+                M=M,
             )
             result = result._replace(
                 info=result.info._replace(
@@ -598,17 +789,22 @@ class RecycleManager:
                 )
             )
         self.systems_solved += 1
-        self._refresh(result, AW)  # AW unused by _refresh when self.W is None
+        self._refresh(result, w_flat, aw_flat)
         return result
 
     # -- internal ----------------------------------------------------------
-    def _refresh(self, result: CGResult, AW: Optional[Pytree]) -> None:
+    def _refresh(
+        self,
+        result: CGResult,
+        w_flat: Optional[jnp.ndarray],
+        aw_flat: Optional[jnp.ndarray],
+    ) -> None:
         rec = result.recycle
         if rec is None:
             return
         if int(rec.stored) == 0:
             # Nothing recorded (0-iteration solve: x0 was already exact) —
-            # keep the current basis as-is.  In particular a None basis
+            # keep the current basis as-is.  In particular a None state
             # must stay None, not become a phantom zero basis that every
             # later solve "refreshes" for k wasted matvecs.  This scalar
             # read costs nothing extra: solve() already synced on
@@ -619,10 +815,7 @@ class RecycleManager:
         # Flat masked extraction: the dynamic stored count feeds the jitted
         # extraction as a device scalar (the pre-flat-engine path
         # static-sliced on it, recompiling for every distinct count).
-        _, unravel = pt.ravel_vector(result.x)
         P, AP = rec.P, rec.AP  # already flat (flat_recycle=True)
-        w_flat = pt.ravel_basis(self.W) if self.W is not None else None
-        aw_flat = pt.ravel_basis(AW) if self.W is not None else None
         k = min(self.k, P.shape[0] + (0 if w_flat is None else w_flat.shape[0]))
         extract = (
             _extract_next_basis_jit if self.use_jit else _extract_next_basis
@@ -630,9 +823,13 @@ class RecycleManager:
         W_new, AW_new, theta = extract(
             w_flat, aw_flat, P, AP, rec.stored, k, select=self.select
         )
-        self.W = pt.unravel_basis(W_new, unravel)
-        self.AW = pt.unravel_basis(AW_new, unravel)
-        self.theta = theta
+        self.state = RecycleState(
+            W=W_new,
+            AW=AW_new,
+            theta=theta,
+            systems_solved=jnp.int32(self.systems_solved),
+        )
+        self._has_aw = True
 
 
 _extract_next_basis_jit = jax.jit(
@@ -674,7 +871,6 @@ def recycled_solve_jit(
         ell=ell,
         tol=tol,
         maxiter=maxiter,
-        waw_jitter=1e-12,
         flat_recycle=True,
     )
     _, unravel = pt.ravel_vector(b)

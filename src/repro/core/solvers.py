@@ -49,6 +49,13 @@ from repro.kernels import ops as kops
 
 Pytree = Any
 
+# The ONE waw_jitter default, carried by ``repro.core.api.SolveSpec`` and
+# referenced (never re-written as a literal) by every solve path.  Keep it
+# SMALL: jitter ≳1e-8 reinjects un-deflated W-components each iteration and
+# makes def-CG diverge with a well-converged Ritz basis (measured; see the
+# ``waw_jitter`` arg of :func:`defcg`).
+DEFAULT_WAW_JITTER = 1e-12
+
 
 class SolveInfo(NamedTuple):
     """Diagnostics of an iterative solve (all traced values)."""
@@ -207,9 +214,10 @@ def defcg(
     maxiter: int = 1000,
     min_iters: int = 0,
     record_residuals: bool = False,
-    waw_jitter: float = 0.0,
+    waw_jitter: float = DEFAULT_WAW_JITTER,
     exact_aw: bool = True,
     flat_recycle: bool = False,
+    M: Optional[Callable[[Pytree], Pytree]] = None,
 ) -> CGResult:
     """Deflated CG — ``def-CG(k, ell)`` of the paper (k = basis size of W).
 
@@ -225,12 +233,24 @@ def defcg(
       min_iters: force at least this many iterations (useful to guarantee
          ``ell`` stored columns inside fully-jitted outer loops).
       waw_jitter: relative diagonal jitter for the k×k Cholesky.  Keep
-         this SMALL (≲1e-12): the jitter perturbs μ = (WᵀAW)⁻¹(AW)ᵀr, and
-         the un-deflated W-component it reinjects each iteration compounds
-         — with a well-converged Ritz basis and a wide θ spread, jitter
-         ≳1e-8 makes def-CG diverge outright (measured).  Exactly-zero
-         basis columns (clamped extraction slots) are regularized away
-         unconditionally regardless of this setting.
+         this SMALL (the :data:`DEFAULT_WAW_JITTER` = 1e-12 shared with
+         every other solve path): the jitter perturbs μ = (WᵀAW)⁻¹(AW)ᵀr,
+         and the un-deflated W-component it reinjects each iteration
+         compounds — with a well-converged Ritz basis and a wide θ spread,
+         jitter ≳1e-8 makes def-CG diverge outright (measured).
+         Exactly-zero basis columns (clamped extraction slots) are
+         regularized away unconditionally regardless of this setting.
+      M: optional SPD preconditioner apply ``r ↦ M⁻¹ r``.  Deflation and
+         preconditioning compose (the Soodhalter et al. projection
+         framework): the iteration is the split-preconditioned def-CG —
+         it carries the PCG recurrence scalar ``rᵀz`` (z = M⁻¹r) through
+         loop state and deflates in the preconditioned inner product
+         (``μ = (WᵀAW)⁻¹ (AW)ᵀ z``), which is exactly plain def-CG on
+         ``M^{-1/2} A M^{-1/2}`` with the transformed basis ``M^{1/2}W``
+         mapped back (tested to 1e-10 against that reference).  Costs one
+         extra fused pass (``kernels.ops.fused_rz_reduce``) plus the M
+         apply per iteration; convergence is still tested on the TRUE
+         residual ‖r‖.
       exact_aw: declare that ``AW`` is exactly ``A @ W``.  When False (a
          *stale* basis recycled across a drifted operator — the paper's
          cheap mode), the initial residual is recomputed with one true
@@ -264,6 +284,7 @@ def defcg(
     matvecs = jnp.int32(0)
 
     A_flat = _flat_operator(A, unravel)
+    precond = _flat_operator(M, unravel) if M is not None else None
     x_flat = (
         jnp.zeros_like(b_flat) if x0 is None else pt.ravel(x0)
     )
@@ -307,8 +328,10 @@ def defcg(
             r_flat = b_flat - A_flat(x_flat)
             matvecs = matvecs + 1
 
-        mu0 = cho_solve(waw_cho, pt.basis_dot(aw_flat, r_flat))
-        p_flat = r_flat - pt.basis_combine(w_flat, mu0)
+        z_flat = precond(r_flat) if precond is not None else r_flat
+        # Deflation in the preconditioned inner product: μ from (AW)ᵀz.
+        mu0 = cho_solve(waw_cho, pt.basis_dot(aw_flat, z_flat))
+        p_flat = z_flat - pt.basis_combine(w_flat, mu0)
         # In-loop μ solves become one k×k GEMV: (WᵀAW)⁻¹ is formed once
         # from the (jittered, equilibrated) Cholesky — numerically benign
         # at these sizes, and it keeps LAPACK dispatches out of the loop.
@@ -316,10 +339,12 @@ def defcg(
     else:
         r_flat = b_flat - A_flat(x_flat)
         matvecs = matvecs + 1
-        p_flat = r_flat
+        z_flat = precond(r_flat) if precond is not None else r_flat
+        p_flat = z_flat
 
     rnorm0 = pt.tree_norm(r_flat)
-    rs0 = pt.tree_dot(r_flat, r_flat)
+    # The carried recurrence scalar: rᵀz (== ‖r‖² without a preconditioner).
+    rs0 = pt.tree_dot(r_flat, z_flat)
 
     if record_residuals:
         trace0 = jnp.full((maxiter + 1,), jnp.nan, dtype=rnorm0.dtype)
@@ -355,19 +380,35 @@ def defcg(
         alpha = jnp.where(bad | (~active), 0.0, rs / jnp.where(bad, 1.0, d))
 
         mu = None
-        if deflating:
-            x, r, rs_new, awr = kops.fused_cg_update(
-                x, r, p, ap, alpha, aw_flat
-            )
-            mu = waw_inv @ awr.astype(waw_inv.dtype)
+        if precond is None:
+            # Unpreconditioned: rᵀr IS the recurrence scalar, and the
+            # deflation GEMV rides in the update pass.
+            if deflating:
+                x, r, rs_new, awr = kops.fused_cg_update(
+                    x, r, p, ap, alpha, aw_flat
+                )
+                mu = waw_inv @ awr.astype(waw_inv.dtype)
+            else:
+                x, r, rs_new, _ = kops.fused_cg_update(x, r, p, ap, alpha)
+            rr = rs_new
+            zvec = r
         else:
-            x, r, rs_new, _ = kops.fused_cg_update(x, r, p, ap, alpha)
+            # Split-preconditioned: z = M⁻¹r only exists after the update,
+            # so rᵀz and (AW)ᵀz go in a second fused pass; convergence is
+            # still tested on the true residual ‖r‖ from the update pass.
+            x, r, rr, _ = kops.fused_cg_update(x, r, p, ap, alpha)
+            zvec = precond(r)
+            rs_new, awz = kops.fused_rz_reduce(
+                r, zvec, aw_flat if deflating else None
+            )
+            if deflating:
+                mu = waw_inv @ awz.astype(waw_inv.dtype)
         beta = rs_new / jnp.where(rs == 0.0, 1.0, rs)
 
-        p_new, _, _ = kops.fused_deflate_direction(r, p, beta, w_flat, mu)
+        p_new, _, _ = kops.fused_deflate_direction(zvec, p, beta, w_flat, mu)
         p = jnp.where(active, p_new, p)
 
-        rnorm = jnp.sqrt(rs_new)
+        rnorm = jnp.sqrt(rr)
         if trace is not None:
             # Frozen steps rewrite slot j+1 with its old value, keeping
             # the NaN tail of the trace untouched.
@@ -451,10 +492,33 @@ def cholesky_solve(mat: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
 # the Laplace loop and RecycleManager do) makes these hit the jit cache, so
 # a Newton sequence compiles each solver variant exactly once.
 
-cg_jit = jax.jit(
+# ``M`` is a TRACED argument of the jitted entry points: preconditioners
+# (``repro.core.preconditioners``) are registered pytree nodes whose data
+# (diag, sketch basis) are children, so a Newton loop that rebuilds its
+# Jacobi/Nyström preconditioner every system hits the jit cache instead of
+# recompiling.  A bare closure is not traceable data; ``cg_jit`` keeps the
+# pre-redesign behavior for those by routing them through a static-M jit
+# (cached by closure identity — stable closures still cache-hit).
+
+_cg_jit_traced_m = jax.jit(
+    cg,
+    static_argnames=("tol", "atol", "maxiter", "record_residuals"),
+)
+_cg_jit_static_m = jax.jit(
     cg,
     static_argnames=("tol", "atol", "maxiter", "M", "record_residuals"),
 )
+
+
+def cg_jit(*args, **kwargs):
+    """Jitted :func:`cg`.  ``M`` may be None, a registered pytree node
+    (traced — rebuild freely, one compilation), or a bare callable
+    (static — falls back to hashing by identity, as before the
+    SolveSpec redesign)."""
+    M = kwargs.get("M")
+    if M is not None and jax.tree_util.all_leaves([M]):
+        return _cg_jit_static_m(*args, **kwargs)
+    return _cg_jit_traced_m(*args, **kwargs)
 
 defcg_jit = jax.jit(
     defcg,

@@ -28,7 +28,16 @@ from typing import Callable, List, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import KernelSystemOperator, RecycleManager, cholesky_solve
+from repro.core import (
+    KernelSystemOperator,
+    RecycleManager,
+    SolveSpec,
+    cholesky_solve,
+    jacobi,
+    kernel_nystrom_preconditioner,
+    randomized_nystrom,
+)
+from repro.core.api import solve_jit
 from repro.core.solvers import cg_jit
 from repro.gp.kernels import RBFKernel
 
@@ -76,6 +85,8 @@ def laplace_gpc(
     solver_tol: float = 1e-5,
     solver_maxiter: int = 2000,
     recycle: Optional[RecycleManager] = None,
+    spec: Optional[SolveSpec] = None,
+    precond_key=None,
     newton_tol: float = 1.0,
     max_newton: int = 30,
     impl: str = "auto",
@@ -87,8 +98,21 @@ def laplace_gpc(
     """Find the Laplace mode f̂ of GP classification by Newton's method.
 
     Args:
-      solver: "cholesky" | "cg" | "defcg".
+      solver: "cholesky" | "cg" | "defcg" (ignored when ``spec`` given).
       recycle: RecycleManager for solver="defcg" (created if None).
+      spec: a :class:`repro.core.SolveSpec` — the front-door path: every
+        Newton system is solved by ``repro.core.solve`` with a
+        :class:`RecycleState` carried across iterations (one jitted
+        computation per solve, no host-driven manager) and the spec's
+        preconditioner strategy applied.  ``precond="jacobi"`` builds
+        ``diag(A) = 1 + h·k(x,x)`` per iteration; ``precond="nystrom"``
+        sketches the INVARIANT kernel ``K ≈ UΛUᵀ`` once
+        (``precond_rank + 8`` kernel matvecs, charged to the first
+        system's matvec count) and rebinds it to each system's drifting
+        ``H½`` by a rank-r Woodbury solve
+        (:func:`repro.core.kernel_nystrom_preconditioner`) — zero
+        operator matvecs per system, exact under drift.
+      precond_key: PRNG key for ``spec.precond="nystrom"``.
       newton_tol: stop when ΔΨ < newton_tol (paper used ΔΨ < 1).
       k_dense: pre-materialized K.  Required by the Cholesky path (built
         here if absent).  If ``dense_matvec=True`` the iterative solvers
@@ -103,6 +127,14 @@ def laplace_gpc(
     """
     n = x.shape[0]
     f = jnp.zeros(n, x.dtype)
+    if spec is not None:
+        if spec.precond == "custom":
+            raise ValueError(
+                "laplace_gpc builds the preconditioner itself and has no M "
+                "parameter — use spec.precond='jacobi'/'nystrom'/'none', or "
+                "drive repro.core.solve directly for a custom M"
+            )
+        solver = "spec"
     if (solver == "cholesky" or dense_matvec) and k_dense is None:
         k_dense = kernel.gram(x)
     if dense_matvec:
@@ -111,6 +143,9 @@ def laplace_gpc(
         k_mv = kernel.matvec_fn(x, impl=impl, block=block)
     if solver == "defcg" and recycle is None:
         recycle = RecycleManager(k=8, ell=12, tol=solver_tol, maxiter=solver_maxiter)
+    solve_state = None  # RecycleState carried across Newton systems
+    k_sketch = None  # once-per-call Nyström sketch (U, lam) of K
+    sketch_matvecs = 0
 
     trace = NewtonTrace()
     psi_prev = -jnp.inf
@@ -134,7 +169,39 @@ def laplace_gpc(
             info = None
         else:
             a_op = KernelSystemOperator(k_mv, sqrt_h)
-            if solver == "cg":
+            if solver == "spec":
+                M = None
+                if spec.precond == "jacobi":
+                    # diag(A) = 1 + h_i k(x_i, x_i) — exact, host-free.
+                    diag_k = (
+                        jnp.diag(k_dense)
+                        if dense_matvec
+                        else jnp.full(n, kernel.theta**2, x.dtype)
+                    )
+                    M = jacobi(1.0 + hdiag * diag_k)
+                elif spec.precond == "nystrom":
+                    if k_sketch is None:
+                        key = (
+                            precond_key
+                            if precond_key is not None
+                            else jax.random.PRNGKey(0)
+                        )
+                        k_sketch = randomized_nystrom(
+                            k_mv,
+                            jnp.zeros(n, x.dtype),
+                            rank=spec.precond_rank,
+                            key=key,
+                        )
+                        sketch_matvecs = spec.precond_rank + 8
+                    M = kernel_nystrom_preconditioner(
+                        k_sketch[0], k_sketch[1], sqrt_h
+                    )
+                res = solve_jit(
+                    a_op, b, spec, solve_state, x0=x_prev, M=M,
+                    record_residuals=record_residuals,
+                )
+                solve_state = res.state
+            elif solver == "cg":
                 res = cg_jit(
                     a_op, b, x_prev,
                     tol=solver_tol, maxiter=solver_maxiter,
@@ -164,7 +231,10 @@ def laplace_gpc(
         trace.cumulative_time.append(solve_time)
         if info is not None:
             trace.solver_iterations.append(int(info.iterations))
-            trace.solver_matvecs.append(int(info.matvecs))
+            # The one-off Nyström sketch cost is charged to the system
+            # that built it — honest a-priori-subspace accounting.
+            trace.solver_matvecs.append(int(info.matvecs) + sketch_matvecs)
+            sketch_matvecs = 0
             if record_residuals and info.residual_norms is not None:
                 trace.residual_traces.append(
                     jnp.asarray(info.residual_norms)

@@ -209,6 +209,104 @@ def fused_cg_update_chunked(x, r, p, ap, alpha, aw=None):
 
 
 # ---------------------------------------------------------------------------
+# fused_rz_reduce: rᵀz and (AW)ᵀz — the preconditioned iteration's reductions
+# ---------------------------------------------------------------------------
+#
+# Preconditioned def-CG applies z = M⁻¹r *after* the residual update, so the
+# recurrence scalar rᵀz and the deflation GEMV (AW)ᵀz cannot ride in
+# fused_cg_update's pass (which only sees r).  This second fused pass reads
+# (r, z, AW) once and emits both reductions — the preconditioned iteration
+# costs exactly one extra sweep over n-sized data beyond the unpreconditioned
+# one, not three.
+
+
+def _rz_reduce_kernel(r_ref, z_ref, rz_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        rz_ref[0, 0] = jnp.float32(0.0)
+
+    rz_ref[0, 0] += jnp.sum(
+        r_ref[...].astype(jnp.float32) * z_ref[...].astype(jnp.float32)
+    )
+
+
+def _rz_reduce_aw_kernel(r_ref, z_ref, aw_ref, rz_ref, awz_ref, *, k):
+    i = pl.program_id(0)
+    zv = z_ref[...].astype(jnp.float32)
+
+    @pl.when(i == 0)
+    def _init():
+        rz_ref[0, 0] = jnp.float32(0.0)
+        for ki in range(k):
+            awz_ref[ki, 0] = jnp.float32(0.0)
+
+    rz_ref[0, 0] += jnp.sum(r_ref[...].astype(jnp.float32) * zv)
+    awv = aw_ref[...].astype(jnp.float32)  # (k, rows, lanes)
+    for ki in range(k):
+        awz_ref[ki, 0] += jnp.sum(awv[ki] * zv)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def fused_rz_reduce_pallas(
+    r: jnp.ndarray,
+    z: jnp.ndarray,
+    aw: Optional[jnp.ndarray] = None,
+    *,
+    block: int = 4096,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """``(rᵀz, AW @ z | None)`` in one read of ``r, z, AW`` (f32 accum)."""
+    n = r.shape[0]
+    rows = max(8, block // _LANES)
+    n_pad = _round_up(n, _LANES * rows)
+    nrows = n_pad // _LANES
+    grid = (nrows // rows,)
+
+    r2, z2 = _pad_rows(r, n_pad), _pad_rows(z, n_pad)
+    vec_spec = pl.BlockSpec((rows, _LANES), lambda i: (i, 0))
+    smem = functools.partial(pl.BlockSpec, memory_space=pltpu.SMEM)
+
+    in_specs = [vec_spec, vec_spec]
+    out_specs = [smem((1, 1), lambda i: (0, 0))]
+    out_shape = [jax.ShapeDtypeStruct((1, 1), jnp.float32)]
+    args = [r2, z2]
+    if aw is not None:
+        k = aw.shape[0]
+        args.append(_pad_rows(aw, n_pad))
+        in_specs.append(pl.BlockSpec((k, rows, _LANES), lambda i: (0, i, 0)))
+        out_specs.append(smem((k, 1), lambda i: (0, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((k, 1), jnp.float32))
+        kernel = functools.partial(_rz_reduce_aw_kernel, k=k)
+    else:
+        kernel = _rz_reduce_kernel
+
+    outs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        compiler_params=CompilerParams(dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+        name="fused_rz_reduce",
+    )(*args)
+    rz = outs[0][0, 0].astype(_acc(r.dtype))
+    awz = outs[1][:, 0].astype(_acc(r.dtype)) if aw is not None else None
+    return rz, awz
+
+
+def fused_rz_reduce_chunked(r, z, aw=None):
+    """Pure-jnp twin: one fused XLA reduction group in the acc dtype."""
+    acc = _acc(r.dtype)
+    za = z.astype(acc)
+    rz = jnp.sum(r.astype(acc) * za)
+    awz = aw.astype(acc) @ za if aw is not None else None
+    return rz, awz
+
+
+# ---------------------------------------------------------------------------
 # fused_deflate_direction: p ← βp + r − Wμ, plus the (p, Ap) buffer write
 # ---------------------------------------------------------------------------
 

@@ -31,6 +31,8 @@ from repro.kernels.cg_fused import (
     fused_cg_update_pallas,
     fused_deflate_direction_chunked,
     fused_deflate_direction_pallas,
+    fused_rz_reduce_chunked,
+    fused_rz_reduce_pallas,
     self_gram_chunked,
     self_gram_pallas,
 )
@@ -140,6 +142,33 @@ def fused_cg_update(
         return ref.fused_cg_update(x, r, p, ap, alpha, aw)
     if impl == "chunked":
         return fused_cg_update_chunked(x, r, p, ap, alpha, aw)
+    raise ValueError(f"unknown impl={impl!r}")
+
+
+def fused_rz_reduce(
+    r: jnp.ndarray,
+    z: jnp.ndarray,
+    aw: Optional[jnp.ndarray] = None,
+    *,
+    impl: str = "auto",
+    block: int = 4096,
+):
+    """``(rᵀz, AW @ z | None)`` in one pass over ``r, z, AW``.
+
+    The preconditioned def-CG iteration's second fused sweep: the PCG
+    recurrence scalar ``rᵀz`` (z = M⁻¹r is only available *after* the
+    residual update, so it cannot ride in :func:`fused_cg_update`) plus
+    the deflation GEMV taken in the preconditioned inner product.
+    """
+    impl = _resolve(impl)
+    if impl in ("pallas", "interpret"):
+        return fused_rz_reduce_pallas(
+            r, z, aw, block=block, interpret=(impl == "interpret")
+        )
+    if impl == "reference":
+        return ref.fused_rz_reduce(r, z, aw)
+    if impl == "chunked":
+        return fused_rz_reduce_chunked(r, z, aw)
     raise ValueError(f"unknown impl={impl!r}")
 
 

@@ -54,6 +54,17 @@ def fused_cg_update(x, r, p, ap, alpha, aw=None):
     return x_new, r_new, rr, awr
 
 
+def fused_rz_reduce(r, z, aw=None):
+    """Semantic definition of the preconditioned-iteration reductions.
+
+    Returns ``(rᵀz, AW @ z | None)`` — the recurrence scalar of PCG and
+    the deflation GEMV taken in the preconditioned inner product.
+    """
+    rz = jnp.vdot(r, z)
+    awz = aw @ z if aw is not None else None
+    return rz, awz
+
+
 def fused_deflate_direction(
     r, p, beta, w=None, mu=None, ap=None, idx=None, p_buf=None, ap_buf=None
 ):

@@ -13,14 +13,14 @@ buys more (paper §3, "the iterates change less and less").
 
 Everything (def-CG loop included) is shape-static and jit-compatible, so
 ``hf_step`` pjit-shards across a pod like any train step.  The inner
-solve+extract is one step of the device-resident sequence engine
-(``recycled_solve_jit``): the GGN is linearized once for the whole
-multi-RHS ``AW`` refresh, and the harmonic-Ritz extraction is the masked
-flat form — no ``min_iters`` floor, so early-converging solves stop
-early.  Damping follows the Levenberg-Marquardt reduction-ratio rule.
-The recycle basis W and the previous step direction (used as the warm
-start, Alg. 1's ``x_{-1}``) are part of the optimizer state — and
-therefore of checkpoints.
+solve+extract is one step of the device-resident sequence engine behind
+the ``repro.core.solve`` front door: the GGN is linearized once for the
+whole multi-RHS ``AW`` refresh, and the harmonic-Ritz extraction is the
+masked flat form — no ``min_iters`` floor, so early-converging solves
+stop early.  Damping follows the Levenberg-Marquardt reduction-ratio
+rule.  The :class:`repro.core.RecycleState` and the previous step
+direction (used as the warm start, Alg. 1's ``x_{-1}``) are part of the
+optimizer state — and therefore of checkpoints.
 """
 
 from __future__ import annotations
@@ -31,7 +31,7 @@ from typing import Any, Callable, NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import GGNOperator, recycled_solve_jit
+from repro.core import GGNOperator, RecycleState, SolveSpec, solve
 from repro.core import pytree as pt
 from repro.core.recycle import random_orthonormal_basis
 
@@ -50,9 +50,19 @@ class HFConfig:
     max_damping: float = 1e6
     recycle: bool = True  # False → plain CG baseline (paper comparison)
 
+    def solve_spec(self) -> SolveSpec:
+        """The inner solver's configuration as the shared SolveSpec."""
+        return SolveSpec(
+            method="defcg",
+            k=self.k,
+            ell=self.ell if self.recycle else 0,
+            tol=self.cg_tol,
+            maxiter=self.cg_maxiter,
+        )
+
 
 class HFState(NamedTuple):
-    W: Pytree  # recycled deflation basis (k stacked vectors)
+    recycle: RecycleState  # recycled deflation state (flat (k, n) basis)
     delta_prev: Pytree  # previous step direction (warm start)
     damping: jnp.ndarray
     step: jnp.ndarray
@@ -60,8 +70,17 @@ class HFState(NamedTuple):
 
 
 def hf_init(params: Pytree, cfg: HFConfig, key) -> HFState:
+    # Bootstrap with a random orthonormal basis — a valid (merely
+    # unhelpful) deflation space; its AW placeholder is zeros, which the
+    # exact per-step refresh overwrites before it is ever used.
+    w_flat = pt.ravel_basis(random_orthonormal_basis(key, params, cfg.k))
     return HFState(
-        W=random_orthonormal_basis(key, params, cfg.k),
+        recycle=RecycleState(
+            W=w_flat,
+            AW=jnp.zeros_like(w_flat),
+            theta=jnp.zeros((cfg.k,), w_flat.dtype),
+            systems_solved=jnp.int32(0),
+        ),
         delta_prev=pt.tree_zeros_like(params),
         damping=jnp.float32(cfg.init_damping),
         step=jnp.int32(0),
@@ -111,10 +130,15 @@ def hf_step(
     neg_grad = pt.tree_scale(-1.0, grads)
 
     if cfg.recycle:
-        w_next, delta, result = recycled_solve_jit(
-            op, neg_grad, state.delta_prev, state.W,
-            k=cfg.k, ell=cfg.ell, tol=cfg.cg_tol, maxiter=cfg.cg_maxiter,
-        )
+        # One front-door step: exact AW refresh (GGN linearized once),
+        # flat def-CG, masked harmonic-Ritz extraction into the next state.
+        # Plain solve (not solve_jit): the GGNOperator's closures are
+        # rebuilt per step, so an inner jit would cache-miss every call —
+        # hf_step is designed to be jit-wrapped as a whole by the caller
+        # (as examples/hessian_free_lm.py does), like any train step.
+        res = solve(op, neg_grad, cfg.solve_spec(), state.recycle,
+                    x0=state.delta_prev)
+        delta, result, recycle_next = res.x, res, res.state
     else:
         from repro.core import defcg
 
@@ -122,7 +146,7 @@ def hf_step(
             op, neg_grad, state.delta_prev,
             ell=0, tol=cfg.cg_tol, maxiter=cfg.cg_maxiter,
         )
-        delta, w_next = result.x, state.W
+        delta, recycle_next = result.x, state.recycle
 
     new_params = pt.tree_axpy(cfg.lr, delta, params)
 
@@ -147,7 +171,7 @@ def hf_step(
     )
 
     new_state = HFState(
-        W=w_next,
+        recycle=recycle_next,
         delta_prev=delta_kept,
         damping=damping,
         step=state.step + 1,

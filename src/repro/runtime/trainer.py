@@ -3,8 +3,10 @@
 The loop a pod-scale deployment needs, in one class:
 
 * **checkpoint/restart** — resumes from the newest valid checkpoint
-  (params + optimizer state + recycle basis + data position); the data
-  pipeline is content-addressed by step so the stream continues exactly;
+  (params + optimizer state incl. the solver's ``RecycleState`` + data
+  position); the data pipeline is content-addressed by step so the
+  stream continues exactly, and the first post-restore solve deflates
+  with the recovered basis;
 * **failure handling** — any exception in a step (device loss, injected
   fault) triggers restore-from-checkpoint and replay; a bounded retry
   budget prevents crash loops;

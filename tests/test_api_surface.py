@@ -1,0 +1,129 @@
+"""Public-API snapshot: the config surface must not silently fork again.
+
+ISSUE 3 exists because five entry points each grew overlapping kwargs
+with drifting defaults.  This test pins (a) ``repro.core.__all__`` and
+(b) the exact ``SolveSpec`` field set + defaults, so any future PR that
+adds a parallel config path (or quietly changes a shared default) fails
+here and has to update the snapshot EXPLICITLY — with a reviewable diff.
+"""
+
+import dataclasses
+
+import repro.core as core
+from repro.core import SolveSpec
+from repro.core.solvers import DEFAULT_WAW_JITTER
+
+# Alphabetical snapshot of the public surface.  Additions are fine (update
+# deliberately); removals/renames are API breaks.
+EXPECTED_CORE_ALL = sorted(
+    [
+        # front doors (core/api.py)
+        "BatchSolveResult",
+        "SequenceSolveResult",
+        "SolveResult",
+        "SolveSpec",
+        "make_preconditioner",
+        "solve",
+        "solve_batch",
+        "solve_batch_jit",
+        "solve_jit",
+        "solve_sequence",
+        # operators
+        "GGNOperator",
+        "KernelSystemOperator",
+        "LinearOperator",
+        "apply_to_basis",
+        "from_callable",
+        "from_matrix",
+        "materialize",
+        # preconditioners
+        "JacobiPreconditioner",
+        "NystromPreconditioner",
+        "WoodburyKernelPreconditioner",
+        "jacobi",
+        "kernel_nystrom_preconditioner",
+        "nystrom_preconditioner",
+        "randomized_nystrom",
+        # recycling
+        "RecycleManager",
+        "RecycleState",
+        "SequenceResult",
+        "harmonic_ritz",
+        "harmonic_ritz_flat",
+        "random_orthonormal_basis",
+        "recycled_solve_jit",
+        "solve_sequence_jit",
+        # solvers
+        "DEFAULT_WAW_JITTER",
+        "CGResult",
+        "RecycleData",
+        "SolveInfo",
+        "cg",
+        "cholesky_solve",
+        "defcg",
+        "deflated_initial_guess",
+    ]
+)
+
+# The ONE solver-configuration schema.  Field name -> default.
+EXPECTED_SOLVESPEC_FIELDS = {
+    "method": "defcg",
+    "k": 8,
+    "ell": 12,
+    "tol": 1e-5,
+    "atol": 0.0,
+    "maxiter": 1000,
+    "select": "largest",
+    "waw_jitter": DEFAULT_WAW_JITTER,
+    "refresh_aw": "exact",
+    "precond": "none",
+    "precond_rank": 16,
+    "precond_sigma": 1.0,
+}
+
+
+def test_core_all_snapshot():
+    assert sorted(core.__all__) == EXPECTED_CORE_ALL
+
+
+def test_core_all_resolves():
+    for name in core.__all__:
+        assert getattr(core, name) is not None, name
+
+
+def test_solvespec_field_schema():
+    fields = {f.name: f.default for f in dataclasses.fields(SolveSpec)}
+    assert fields == EXPECTED_SOLVESPEC_FIELDS
+
+
+def test_solvespec_frozen_and_hashable():
+    spec = SolveSpec()
+    assert hash(spec) == hash(SolveSpec())
+    try:
+        spec.k = 5  # type: ignore[misc]
+    except dataclasses.FrozenInstanceError:
+        pass
+    else:  # pragma: no cover
+        raise AssertionError("SolveSpec must be frozen")
+
+
+def test_waw_jitter_never_forks():
+    """The unified default is exactly 1e-12 everywhere it surfaces."""
+    import inspect
+
+    from repro.core import RecycleManager, defcg
+    from repro.core import recycle as recycle_mod
+
+    assert DEFAULT_WAW_JITTER == 1e-12
+    assert SolveSpec().waw_jitter == DEFAULT_WAW_JITTER
+    assert (
+        inspect.signature(defcg).parameters["waw_jitter"].default
+        == DEFAULT_WAW_JITTER
+    )
+    assert (
+        inspect.signature(recycle_mod.solve_sequence)
+        .parameters["waw_jitter"]
+        .default
+        == DEFAULT_WAW_JITTER
+    )
+    assert RecycleManager(k=2, ell=4).waw_jitter == DEFAULT_WAW_JITTER

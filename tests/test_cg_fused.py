@@ -84,6 +84,39 @@ class TestFusedCGUpdate:
         )
 
 
+class TestFusedRzReduce:
+    """Oracle parity for the preconditioned-iteration reduction pass."""
+
+    @pytest.mark.parametrize("impl", ["interpret", "chunked"])
+    @pytest.mark.parametrize("case", PARITY_CASES)
+    def test_matches_oracle(self, impl, case):
+        n, k, block = case
+        rng = np.random.default_rng(2 * n + k)
+        r, z = (jnp.asarray(rng.standard_normal(n), F32) for _ in range(2))
+        aw = jnp.asarray(rng.standard_normal((k, n)), F32)
+        want = ref.fused_rz_reduce(r, z, aw)
+        got = ops.fused_rz_reduce(r, z, aw, impl=impl, block=block)
+        np.testing.assert_allclose(
+            float(got[0]), float(want[0]), rtol=2e-4,
+            err_msg=f"{impl} rz n={n}",
+        )
+        scale = max(1.0, float(jnp.max(jnp.abs(want[1]))))
+        np.testing.assert_allclose(
+            np.asarray(got[1]) / scale, np.asarray(want[1]) / scale,
+            rtol=2e-4, atol=2e-4, err_msg=f"{impl} awz n={n} k={k}",
+        )
+
+    @pytest.mark.parametrize("impl", ["interpret", "chunked"])
+    def test_no_deflation_variant(self, impl):
+        rng = np.random.default_rng(5)
+        n = 513
+        r, z = (jnp.asarray(rng.standard_normal(n), F32) for _ in range(2))
+        want = ref.fused_rz_reduce(r, z)
+        got = ops.fused_rz_reduce(r, z, impl=impl, block=1024)
+        assert got[1] is None
+        np.testing.assert_allclose(float(got[0]), float(want[0]), rtol=2e-4)
+
+
 class TestFusedDeflateDirection:
     @pytest.mark.parametrize("impl", ["interpret", "chunked"])
     @pytest.mark.parametrize("case", PARITY_CASES)
@@ -232,7 +265,13 @@ class TestFlatEngineEquivalence:
         want_x, want_p, want_ap, want_j = _seed_defcg(
             a_op, b, W, AW, ell=ell, tol=1e-12, maxiter=400
         )
-        res = defcg(a_op, b, W=W, AW=AW, ell=ell, tol=1e-12, maxiter=400)
+        # waw_jitter=0.0 explicitly: the seed loop factorizes WᵀAW without
+        # jitter, and this test is a strict transcription-equivalence check
+        # (the shared production default is DEFAULT_WAW_JITTER = 1e-12).
+        res = defcg(
+            a_op, b, W=W, AW=AW, ell=ell, tol=1e-12, maxiter=400,
+            waw_jitter=0.0,
+        )
 
         assert int(res.info.iterations) == want_j
         np.testing.assert_allclose(

@@ -196,7 +196,9 @@ class TestSolveSequence:
     def test_traces_without_host_sync(self):
         """The whole N-system sequence must be traceable: any int()/.item()
         on traced per-system state would raise a ConcretizationTypeError
-        here.  This is the acceptance criterion made executable."""
+        here.  This is the acceptance criterion made executable — extended
+        to the batched multi-tenant front door, which must likewise lower
+        to ONE XLA computation (single jaxpr, no host round-trips)."""
         mats, bs = _drifting_sequence(num=3)
 
         def run(mats, bs):
@@ -208,6 +210,28 @@ class TestSolveSequence:
 
         jaxpr = jax.make_jaxpr(run)(mats, bs)
         assert jaxpr is not None
+
+        from repro.core import SolveSpec, solve_batch
+
+        spec = SolveSpec(k=4, ell=8, tol=1e-6, maxiter=200)
+
+        def run_batch(mats, bs):
+            out = solve_batch(mats, bs, spec, make_operator=from_matrix)
+            return out.x, out.info.converged, out.state.W
+
+        # B tenants (reusing the drifting mats as independent systems)
+        jaxpr_b = jax.make_jaxpr(run_batch)(mats, bs)
+        assert jaxpr_b is not None
+
+        def run_batch_seq(mats, bs):
+            out = solve_batch(
+                mats[None], bs[None], spec,
+                make_operator=from_matrix, sequence=True,
+            )
+            return out.info.iterations, out.state.W
+
+        jaxpr_bs = jax.make_jaxpr(run_batch_seq)(mats, bs)
+        assert jaxpr_bs is not None
 
     def test_warm_start_carry(self):
         """carry_x: re-solving the same system is near-free."""
