@@ -9,7 +9,9 @@ Sections:
   fig2/3   — paper Fig 2 (iterations/system) + Fig 3 (residual slopes)
   fig4     — paper Fig 4 (inducing-point cost/precision)
   micro    — controlled-spectrum κ_eff validation (paper §2.1)
-  seq      — sequence engine: extraction+refresh overhead, device scan
+  seq      — sequence engine: extraction+refresh overhead, device scan,
+             and the recycle-strategy matrix (iterations × matvecs for
+             harmonic/windowed/mgeometry on a drifting GP Newton sequence)
   batch    — multi-tenant solve_batch vs sequential loop (B ∈ {1, 8, 64})
   hf       — Hessian-free recycling at mini-LM scale
   kernel   — fused-kernel micro-benchmarks

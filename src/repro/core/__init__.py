@@ -58,6 +58,12 @@ from repro.core.solvers import (
     defcg,
     deflated_initial_guess,
 )
+from repro.core.strategies import (
+    HarmonicRitz,
+    MGeometryHarmonic,
+    RecycleStrategy,
+    WindowedRecombine,
+)
 
 __all__ = [
     "BatchSolveResult",
@@ -100,4 +106,8 @@ __all__ = [
     "cholesky_solve",
     "defcg",
     "deflated_initial_guess",
+    "HarmonicRitz",
+    "MGeometryHarmonic",
+    "RecycleStrategy",
+    "WindowedRecombine",
 ]

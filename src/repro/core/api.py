@@ -49,6 +49,12 @@ from repro.core import recycle as recycle_mod
 from repro.core import solvers as solvers_mod
 from repro.core.recycle import RecycleState, SequenceResult
 from repro.core.solvers import DEFAULT_WAW_JITTER, SolveInfo
+from repro.core.strategies import (
+    HarmonicRitz,
+    MGeometryHarmonic,
+    RecycleStrategy,
+    WindowedRecombine,
+)
 
 Pytree = Any
 
@@ -56,6 +62,11 @@ _METHODS = ("cg", "defcg")
 _SELECTS = ("largest", "smallest")
 _REFRESH_MODES = ("exact", "stale")
 _PRECONDS = ("none", "jacobi", "nystrom", "custom")
+
+# The vmap axis name solve_batch lifts tenants over; the def-CG recording
+# scan reduces `active` across it so the whole batch stops paying matvecs
+# the moment the LAST tenant converges (see solvers.defcg `batch_axis`).
+_TENANT_AXIS = "repro_tenants"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,7 +92,16 @@ class SolveSpec:
       refresh_aw: ``"exact"`` — recompute ``AW`` per system (k matvecs,
         one fused multi-RHS pass); ``"stale"`` — reuse extraction
         products (zero matvecs, the paper's cheap mode; exact only for an
-        unchanged operator).
+        unchanged operator).  Consumed by the :class:`HarmonicRitz`
+        strategy only; the other strategies own their refresh policy, so
+        combining them with ``"stale"`` is rejected as contradictory.
+      strategy: the :class:`repro.core.strategies.RecycleStrategy` owning
+        the end-of-solve transition ``(window, state) → state`` and the
+        per-system refresh policy: :class:`HarmonicRitz` (incumbent),
+        :class:`WindowedRecombine` (zero-matvec windowed refresh with a
+        drift guard — the paper's O(n²(ℓ+1)k) accounting), or
+        :class:`MGeometryHarmonic` (extraction in the preconditioner's
+        geometry; requires ``precond != "none"``).
       precond: preconditioner strategy — ``"none"``, ``"jacobi"``
         (diagonal), ``"nystrom"`` (randomized eigensketch), or
         ``"custom"`` (caller passes any SPD apply as ``M``).  Strategies
@@ -103,6 +123,7 @@ class SolveSpec:
     precond: str = "none"
     precond_rank: int = 16
     precond_sigma: float = 1.0
+    strategy: RecycleStrategy = HarmonicRitz()
 
     def __post_init__(self):
         if self.method not in _METHODS:
@@ -123,6 +144,39 @@ class SolveSpec:
             raise ValueError("ell >= 0, maxiter >= 1, precond_rank >= 1 required")
         if self.tol < 0 or self.atol < 0 or self.waw_jitter < 0:
             raise ValueError("tol, atol and waw_jitter must be non-negative")
+        if not isinstance(self.strategy, RecycleStrategy):
+            raise ValueError(
+                "strategy must be a repro.core.strategies.RecycleStrategy "
+                f"instance, got {self.strategy!r}"
+            )
+        if (
+            self.refresh_aw == "stale"
+            and not isinstance(self.strategy, HarmonicRitz)
+        ):
+            raise ValueError(
+                f"refresh_aw='stale' conflicts with strategy="
+                f"{type(self.strategy).__name__}: non-default strategies "
+                "own their refresh policy (WindowedRecombine IS the "
+                "guarded stale mode)"
+            )
+        if self.strategy.needs_preconditioner and self.precond == "none":
+            raise ValueError(
+                f"strategy={type(self.strategy).__name__} extracts in the "
+                "preconditioner's geometry — it needs precond != 'none'"
+            )
+        if (
+            isinstance(self.strategy, WindowedRecombine)
+            and self.method == "defcg"
+            and self.ell == 0
+        ):
+            # Without a recording window there is no transition: the
+            # carried AW can never be re-derived from stored quantities
+            # and the drift carry never updates, so every solve would
+            # re-pay the in-solve refresh it exists to avoid.
+            raise ValueError(
+                "strategy=WindowedRecombine needs ell > 0 — its refresh "
+                "recombines the recorded window"
+            )
 
 
 class SolveResult(NamedTuple):
@@ -211,6 +265,7 @@ def solve(
     x0: Optional[Pytree] = None,
     M=None,
     record_residuals: bool = False,
+    batch_axis: Optional[str] = None,
 ) -> SolveResult:
     """Solve one SPD system ``A x = b`` per ``spec``, carrying ``state``.
 
@@ -231,9 +286,14 @@ def solve(
     not bumped) so a mixed cg/defcg pipeline can thread one state
     through both.
 
-    Accounting: ``info.matvecs`` includes the per-solve ``AW`` refresh
-    (k operator applications when the state carries a basis and
-    ``refresh_aw="exact"``), matching :func:`solve_sequence`.
+    Accounting: ``info.matvecs`` includes whatever refresh the spec's
+    strategy spent (k operator applications for an exact refresh with a
+    carried basis; zero on cold bootstraps, un-triggered guards, and
+    stale mode), matching :func:`solve_sequence`.
+
+    ``batch_axis`` names the ``vmap`` axis when this solve is lifted
+    over tenants (``solve_batch`` sets it) — it arms the recording
+    scan's cross-tenant matvec gate; leave ``None`` otherwise.
     """
     spec = SolveSpec() if spec is None else spec
     _check_m(spec, M)
@@ -261,14 +321,16 @@ def solve(
             f"system needs ({spec.k}, {n}) — state and spec must agree"
         )
 
-    # Per-system semantics (refresh, accounting, extraction) are shared
-    # with solve_sequence's scan body — ONE implementation, no drift.
-    result, info, w2, aw2, theta = recycle_mod._one_recycled_solve(
+    # Per-system semantics (refresh policy, accounting, strategy
+    # transition) are shared with solve_sequence's scan body — ONE
+    # implementation, no drift.
+    result, info, w2, aw2, theta, drift2 = recycle_mod._one_recycled_solve(
         A,
         b,
         x0,
         state.W,
         state.AW,
+        state.drift,
         unravel,
         k=spec.k,
         ell=spec.ell,
@@ -278,8 +340,10 @@ def solve(
         select=spec.select,
         waw_jitter=spec.waw_jitter,
         refresh_aw=spec.refresh_aw,
+        strategy=spec.strategy,
         M=M,
         record_residuals=record_residuals,
+        batch_axis=batch_axis,
     )
     new_state = RecycleState(
         W=w2,
@@ -287,11 +351,14 @@ def solve(
         # ell == 0 records nothing — carry the previous Ritz values.
         theta=state.theta if theta is None else theta,
         systems_solved=state.systems_solved + 1,
+        drift=drift2.astype(state.drift.dtype),
     )
     return SolveResult(x=result.x, info=info, state=new_state)
 
 
-solve_jit = jax.jit(solve, static_argnames=("spec", "record_residuals"))
+solve_jit = jax.jit(
+    solve, static_argnames=("spec", "record_residuals", "batch_axis")
+)
 
 
 # ---------------------------------------------------------------------------
@@ -308,6 +375,8 @@ def _solve_sequence_spec(
     make_operator: Optional[Callable[[Any], Any]] = None,
     make_preconditioner: Optional[Callable[[Any], Any]] = None,
     carry_x: bool = False,
+    divergence_fallback: bool = True,
+    batch_axis: Optional[str] = None,
 ) -> SequenceSolveResult:
     if spec.method != "defcg":
         raise ValueError(
@@ -337,6 +406,10 @@ def _solve_sequence_spec(
         waw_jitter=spec.waw_jitter,
         refresh_aw=spec.refresh_aw,
         carry_x=carry_x,
+        strategy=spec.strategy,
+        drift0=state0.drift if state0 is not None else None,
+        divergence_fallback=divergence_fallback,
+        batch_axis=batch_axis,
     )
     num_systems = jax.tree_util.tree_leaves(b_seq)[0].shape[0]
     solved0 = (
@@ -354,6 +427,7 @@ def _solve_sequence_spec(
         AW=seq.AW,
         theta=theta,
         systems_solved=solved0 + num_systems,
+        drift=seq.drift,
     )
     return SequenceSolveResult(
         x=seq.x, info=seq.info, theta=seq.theta, state=state
@@ -369,6 +443,7 @@ def solve_sequence(
     make_operator: Optional[Callable[[Any], Any]] = None,
     make_preconditioner: Optional[Callable[[Any], Any]] = None,
     carry_x: bool = False,
+    divergence_fallback: bool = True,
     **legacy,
 ):
     """Solve a sequence of related SPD systems on-device, spec-driven.
@@ -399,6 +474,7 @@ def solve_sequence(
             make_operator=make_operator,
             make_preconditioner=make_preconditioner,
             carry_x=carry_x,
+            divergence_fallback=divergence_fallback,
         )
     # Legacy signature: (systems, b_seq, W0, AW0, *, k, ell, ...) — W0/AW0
     # may arrive positionally (in the spec/state0 slots) or by keyword.
@@ -418,6 +494,7 @@ def solve_sequence(
         make_operator=make_operator,
         make_preconditioner=make_preconditioner,
         carry_x=carry_x,
+        divergence_fallback=divergence_fallback,
         **legacy,
     )
 
@@ -487,12 +564,15 @@ def solve_batch(
                 make_operator=make_operator,
                 make_preconditioner=make_preconditioner,
                 carry_x=carry_x,
+                batch_axis=_TENANT_AXIS,
             )
             return res.x, res.info, res.state
 
         if state is None:
             state = _batched_zero_state(b_batch, spec, axes=2)
-        x, info, state_out = jax.vmap(one_seq)(systems, b_batch, state)
+        x, info, state_out = jax.vmap(one_seq, axis_name=_TENANT_AXIS)(
+            systems, b_batch, state
+        )
         return BatchSolveResult(x=x, info=info, state=state_out)
 
     if spec.method == "cg":
@@ -520,12 +600,17 @@ def solve_batch(
             if make_preconditioner is not None
             else None
         )
-        res = solve(A, b_i, spec, st_i, M=M)
+        # batch_axis: the recording scan's matvec gate reduces `active`
+        # across the tenant axis, so the batch stops paying operator
+        # applications the moment its LAST tenant converges.
+        res = solve(A, b_i, spec, st_i, M=M, batch_axis=_TENANT_AXIS)
         return res.x, res.info, res.state
 
     if state is None:
         state = _batched_zero_state(b_batch, spec, axes=1)
-    x, info, state_out = jax.vmap(one)(systems, b_batch, state)
+    x, info, state_out = jax.vmap(one, axis_name=_TENANT_AXIS)(
+        systems, b_batch, state
+    )
     return BatchSolveResult(x=x, info=info, state=state_out)
 
 
@@ -544,6 +629,7 @@ def _batched_zero_state(
         AW=jnp.zeros((B, spec.k, n), dtype),
         theta=jnp.zeros((B, spec.k), dtype),
         systems_solved=jnp.zeros((B,), jnp.int32),
+        drift=jnp.zeros((B,), dtype),
     )
 
 

@@ -40,6 +40,7 @@ Two implementations share the same math:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
@@ -51,10 +52,17 @@ from repro.core.solvers import (
     DEFAULT_WAW_JITTER,
     CGResult,
     SolveInfo,
+    _flat_operator,
     defcg,
     defcg_jit,
 )
-from repro.kernels import ops as kops
+from repro.core.strategies import (
+    HarmonicRitz,
+    RecycleStrategy,
+    _select_positive_ritz,
+    extract_next_basis_core,
+    harmonic_ritz_flat_core,
+)
 
 Pytree = Any
 
@@ -79,12 +87,19 @@ class RecycleState:
         them (stale until the next refresh).
       theta: ``(k,)`` harmonic Ritz values (0 = clamped slot).
       systems_solved: int32 scalar — how many solves fed this state.
+      drift: scalar — the recycle strategy's carried drift measurement
+        (the ``‖AW − A·W‖`` proxy read off the last extraction gram; see
+        :class:`repro.core.strategies.WindowedRecombine`).  0 for
+        strategies that do not guard and for cold states.
     """
 
     W: jnp.ndarray
     AW: jnp.ndarray
     theta: jnp.ndarray
     systems_solved: jnp.ndarray
+    drift: jnp.ndarray = dataclasses.field(
+        default_factory=lambda: jnp.float32(0.0)
+    )
 
     @classmethod
     def zeros(cls, k: int, n: int, dtype=jnp.float32) -> "RecycleState":
@@ -94,6 +109,7 @@ class RecycleState:
             AW=jnp.zeros((k, n), dtype),
             theta=jnp.zeros((k,), dtype),
             systems_solved=jnp.int32(0),
+            drift=jnp.zeros((), dtype),
         )
 
     def tree_flatten_with_keys(self):
@@ -104,6 +120,7 @@ class RecycleState:
                 (ga("AW"), self.AW),
                 (ga("theta"), self.theta),
                 (ga("systems_solved"), self.systems_solved),
+                (ga("drift"), self.drift),
             ),
             None,
         )
@@ -112,32 +129,6 @@ class RecycleState:
     def tree_unflatten(cls, aux, children):
         del aux
         return cls(*children)
-
-
-def _select_positive_ritz(zeta, Wm, k: int, select: str):
-    """Pick ``k`` Ritz pairs by θ = 1/ζ, clamped to the positive count.
-
-    ζ ≤ 0 can only arise from rounding or masked/projected-out directions
-    (A SPD ⇒ θ > 0) — never select it.  When fewer than ``k`` positive
-    pairs survive the rank filter, the trailing slots are masked to exact
-    zeros (θ = 0, zero eigenvector column) rather than argsorting the
-    ``±inf`` sentinel keys into the selection, which manufactured ~1e300
-    "Ritz values" normalized from near-zero vectors.
-
-    Returns ``(w_sel, theta, slot_ok)`` with shapes ``(m, k), (k,), (k,)``.
-    """
-    npos = jnp.sum(zeta > 0)
-    slot_ok = jnp.arange(k) < jnp.minimum(npos, k)
-    if select == "largest":
-        order = jnp.argsort(jnp.where(zeta > 0, zeta, jnp.inf))[:k]
-    elif select == "smallest":
-        order = jnp.argsort(jnp.where(zeta > 0, zeta, -jnp.inf))[::-1][:k]
-    else:
-        raise ValueError(f"unknown select={select!r}")
-    w_sel = Wm[:, order] * slot_ok[None, :].astype(Wm.dtype)
-    zeta_sel = jnp.where(slot_ok, zeta[order], 1.0)
-    theta = jnp.where(slot_ok, 1.0 / zeta_sel, 0.0)
-    return w_sel, theta, slot_ok
 
 
 def harmonic_ritz(
@@ -252,55 +243,14 @@ def harmonic_ritz_flat(
     past the surviving positive-Ritz count are exact zeros — downstream
     def-CG treats a zero column as a no-op deflation direction (see the
     jitter floor in ``solvers.defcg``).
+
+    The math lives in :func:`repro.core.strategies.harmonic_ritz_flat_core`
+    (this wrapper keeps the historical 3-tuple signature), which also
+    serves the strategy layer's M-geometry extraction and drift proxy.
     """
-    m = Z.shape[0]
-    if k > m:
-        raise ValueError(f"cannot extract k={k} Ritz vectors from m={m} basis")
-    if valid is not None:
-        vz = valid.astype(Z.dtype)[:, None]
-        Z = Z * vz
-        AZ = AZ * vz
-
-    full = kops.self_gram(jnp.concatenate([Z, AZ], axis=0))  # (2m, 2m)
-    # Quadrants: ⎡ZZᵀ  ·⎤ — diag(ZZᵀ) are the column norms, the lower
-    #            ⎣F    G⎦   blocks are the projection grams.
-    zz = jnp.diag(full[:m, :m])
-    dz = jnp.where(zz > 0, jax.lax.rsqrt(zz), 0.0)
-    G = full[m:, m:] * dz[:, None] * dz[None, :]
-    F = full[m:, :m] * dz[:, None] * dz[None, :]
-    F = 0.5 * (F + F.T)
-
-    # Second-stage equilibration on ‖AZ_i‖.
-    d = jnp.where(jnp.diag(G) > 0, jnp.diag(G), 1.0) ** -0.5
-    G = G * d[:, None] * d[None, :]
-    F = F * d[:, None] * d[None, :]
-
-    # Rank-revealing reduction (identical to the pytree path): masked and
-    # near-dependent columns surface as λ ≈ 0 and are projected out.
-    lam, qg = jnp.linalg.eigh(G)
-    eps = jnp.finfo(G.dtype).eps
-    rcond = jnp.maximum(jnp.asarray(jitter, G.dtype), 100.0 * eps) * m
-    good = lam > rcond * lam[-1]
-    s = jnp.where(good, 1.0 / jnp.sqrt(jnp.maximum(lam, 1e-300)), 0.0)
-    M = s[:, None] * (qg.T @ F @ qg) * s[None, :]
-    M = 0.5 * (M + M.T)
-    zeta, Wm = jnp.linalg.eigh(M)
-
-    w_sel, theta, slot_ok = _select_positive_ritz(zeta, Wm, k, select)
-
-    # u folds the reduction and BOTH equilibrations, so it applies to the
-    # raw (unnormalized) bases: u = D_z · D · Qg S w.
-    u = qg @ (s[:, None] * w_sel)
-    u = u * (d * dz)[:, None]
-    u = u.astype(Z.dtype)
-
-    W = u.T @ Z  # (k, n)
-    AW = u.T @ AZ
-
-    wn = jnp.sqrt(jnp.maximum(jnp.sum(W * W, axis=1), jnp.finfo(u.dtype).tiny))
-    col_scale = jnp.where(slot_ok, 1.0 / wn, 0.0).astype(W.dtype)
-    W = W * col_scale[:, None]
-    AW = AW * col_scale[:, None]
+    W, AW, theta, _ = harmonic_ritz_flat_core(
+        Z, AZ, k, valid=valid, select=select, jitter=jitter
+    )
     return W, AW, theta
 
 
@@ -315,24 +265,14 @@ def _extract_next_basis(
     select: str = "largest",
     jitter: float = 1e-10,
 ):
-    """One cross-system extraction on the flat engine.
-
-    ``Z = [W, P]`` with a traced validity mask: W rows are valid where
-    nonzero (clamped slots are exact zeros), P rows where their index is
-    below the dynamic ``stored`` count.  Shape-static throughout.
-    """
-    ell = p_flat.shape[0]
-    p_valid = jnp.arange(ell) < stored
-    if w_flat is None:
-        Z, AZ, valid = p_flat, ap_flat, p_valid
-    else:
-        Z = jnp.concatenate([w_flat, p_flat], axis=0)
-        AZ = jnp.concatenate([aw_flat, ap_flat], axis=0)
-        w_valid = jnp.sum(w_flat * w_flat, axis=1) > 0
-        valid = jnp.concatenate([w_valid, p_valid])
-    return harmonic_ritz_flat(
-        Z, AZ, k, valid=valid, select=select, jitter=jitter
+    """One cross-system extraction on the flat engine (3-tuple wrapper
+    over :func:`repro.core.strategies.extract_next_basis_core` — the
+    strategy layer's shared masked extraction)."""
+    W, AW, theta, _ = extract_next_basis_core(
+        w_flat, aw_flat, p_flat, ap_flat, stored, k,
+        select=select, jitter=jitter,
     )
+    return W, AW, theta
 
 
 def _apply_basis_flat(A, unravel, w_flat: jnp.ndarray) -> jnp.ndarray:
@@ -348,6 +288,7 @@ def _one_recycled_solve(
     x0: Optional[Pytree],
     w: jnp.ndarray,
     aw_carry: jnp.ndarray,
+    drift: jnp.ndarray,
     unravel,
     *,
     k: int,
@@ -358,33 +299,41 @@ def _one_recycled_solve(
     select: str,
     waw_jitter: float,
     refresh_aw: str,
+    strategy: RecycleStrategy,
     M=None,
     record_residuals: bool = False,
+    batch_axis: Optional[str] = None,
 ):
     """ONE system of the recycled def-CG step, on flat state.
 
-    The single source of truth for per-system semantics — refresh
-    (cold-bootstrap ``A @ 0`` skip), solve, matvec accounting, and the
-    masked extraction — shared by the front-door :func:`repro.core.solve`
-    and by :func:`solve_sequence`'s scan body, so the single-system and
-    scan paths cannot drift apart.
+    The single source of truth for per-system semantics — shared by the
+    front-door :func:`repro.core.solve` and by :func:`solve_sequence`'s
+    scan body, so the single-system and scan paths cannot drift apart.
+    Both halves of the per-system policy are owned by the ``strategy``
+    object (:mod:`repro.core.strategies`):
 
-    Returns ``(result, info, w_next, aw_next, theta)``; ``theta`` is
-    ``None`` when ``ell == 0`` (nothing recorded — callers carry their
-    previous Ritz values).
+    * ``strategy.prepare`` decides which ``AW`` deflates this system and
+      what it costs (exact k-matvec refresh / guarded stale / pure
+      stale), reading the carried ``drift`` measurement;
+    * ``strategy.transition`` consumes the recorded window — the
+      ``(P, AP, α, β, stored)`` handoff from the solver's scan phase —
+      and emits the next ``(W, AW, θ, drift)``.
+
+    Returns ``(result, info, w_next, aw_next, theta, drift_next)``;
+    ``theta`` is ``None`` when ``ell == 0`` (nothing recorded — callers
+    carry their previous Ritz values, and the drift carry passes through
+    unchanged).
     """
-    if refresh_aw == "exact":
-        # Cold bootstrap (all-zero W): A @ 0 = 0 — skip the k operator
-        # passes and their accounting.
-        has_w = jnp.any(w != 0)
-        aw_used = jax.lax.cond(
-            has_w,
-            lambda ww: _apply_basis_flat(A, unravel, ww),
-            jnp.zeros_like,
-            w,
-        )
-    else:
-        aw_used = aw_carry
+    aw_used, refresh_matvecs, exact_aw, stale_guard = strategy.prepare(
+        lambda ww: _apply_basis_flat(A, unravel, ww),
+        w,
+        aw_carry,
+        drift,
+        k=k,
+        refresh_aw=refresh_aw,
+        tol=tol,
+        batch_axis=batch_axis,
+    )
     result = defcg(
         A,
         b,
@@ -397,31 +346,35 @@ def _one_recycled_solve(
         maxiter=maxiter,
         record_residuals=record_residuals,
         waw_jitter=waw_jitter,
-        exact_aw=(refresh_aw == "exact"),
+        exact_aw=exact_aw,
         flat_recycle=True,
         M=M,
+        batch_axis=batch_axis,
+        stale_guard=stale_guard,
     )
+    if result.recycle is not None and result.recycle.aw_used is not None:
+        # The in-solve drift guard may have replaced the stale AW with a
+        # fresh A·W — the transition must recombine what was USED.
+        aw_used = result.recycle.aw_used
     info = result.info
-    if refresh_aw == "exact":
-        # The multi-RHS refresh is one fused pass but k matvecs of
-        # operator work — the §2.2 overhead term, reported honestly
-        # (zero on a cold bootstrap, where it was skipped).
-        info = info._replace(
-            matvecs=info.matvecs + k * has_w.astype(info.matvecs.dtype)
-        )
+    # The multi-RHS refresh is one fused pass but (when the strategy
+    # spent it) k matvecs of operator work — the §2.2 overhead term,
+    # reported honestly: zero on cold bootstraps and un-triggered guards.
+    info = info._replace(
+        matvecs=info.matvecs + refresh_matvecs.astype(info.matvecs.dtype)
+    )
     if ell > 0:
-        w_next, aw_next, theta = _extract_next_basis(
+        w_next, aw_next, theta, drift_next = strategy.transition(
             w,
             aw_used,
-            result.recycle.P,
-            result.recycle.AP,
-            result.recycle.stored,
-            k,
+            result.recycle,
+            k=k,
             select=select,
+            m_apply=(_flat_operator(M, unravel) if M is not None else None),
         )
     else:
-        w_next, aw_next, theta = w, aw_used, None
-    return result, info, w_next, aw_next, theta
+        w_next, aw_next, theta, drift_next = w, aw_used, None, drift
+    return result, info, w_next, aw_next, theta, drift_next
 
 
 # ---------------------------------------------------------------------------
@@ -437,6 +390,7 @@ class SequenceResult(NamedTuple):
     theta: jnp.ndarray  # (num_systems, k) harmonic Ritz values
     W: jnp.ndarray  # final recycled basis, flat (k, n)
     AW: jnp.ndarray  # its A-products under the last refresh
+    drift: Optional[jnp.ndarray] = None  # final strategy drift carry
 
 
 def solve_sequence(
@@ -456,6 +410,10 @@ def solve_sequence(
     waw_jitter: float = DEFAULT_WAW_JITTER,
     refresh_aw: str = "exact",
     carry_x: bool = False,
+    strategy: Optional[RecycleStrategy] = None,
+    drift0: Optional[jnp.ndarray] = None,
+    divergence_fallback: bool = True,
+    batch_axis: Optional[str] = None,
 ) -> SequenceResult:
     """Solve a whole sequence of related SPD systems on-device.
 
@@ -490,11 +448,36 @@ def solve_sequence(
         the extraction's ``AW`` (zero matvecs, approximate deflation, the
         paper's cheap mode; def-CG spends one true matvec re-deriving r₀).
         Stale deflation is exact for an unchanged operator (multiple RHS)
-        but can destabilize the conjugacy recurrence under drift — this
-        fully-traced path has no breakdown fallback, so prefer ``"exact"``
-        for drifting sequences (see :class:`RecycleManager`).
+        but can destabilize the conjugacy recurrence under drift —
+        ``divergence_fallback`` (below) catches that on-device, and the
+        :class:`repro.core.strategies.WindowedRecombine` strategy is the
+        *guarded* form of this mode (prefer it over a bare
+        ``refresh_aw="stale"`` for drifting sequences).
       carry_x: warm-start each system with the previous solution
         (Alg. 1's ``x_{-1}``).
+      strategy: the :class:`repro.core.strategies.RecycleStrategy` owning
+        the per-system refresh policy and end-of-solve transition
+        (``None`` → :class:`repro.core.strategies.HarmonicRitz`, the
+        incumbent behavior).  The strategy's drift measurement rides in
+        the scan carry — still zero host syncs.
+      drift0: initial drift carry (a previous ``SequenceResult.drift`` /
+        ``RecycleState.drift``; ``None`` → 0).
+      divergence_fallback: guard each system of the scan against a
+        poisoned deflation basis.  A stale/ill-conditioned basis can
+        break the conjugacy recurrence outright (``info.breakdown``) or
+        stall it past ``maxiter``; the host-driven
+        :class:`RecycleManager` re-solves clean in that case, but the
+        device path previously had NO fallback — one bad system silently
+        returned garbage and the poisoned basis propagated down the
+        scan.  With the guard, a ``lax.cond`` re-solves that system with
+        a zeroed basis (plain CG + recording — the cold-bootstrap path),
+        the failed attempt's matvecs are folded into the reported total,
+        and the sequence continues from the freshly extracted space.
+        Runtime cost is paid only when taken (the cond is a real branch
+        in the scan body); compile cost is a second solver instance.
+      batch_axis: vmap axis name for the all-tenants-converged matvec
+        gate (see :func:`repro.core.solvers.defcg`); ``solve_batch``
+        sets it.
 
     Returns:
       :class:`SequenceResult` with per-system solutions/diagnostics and
@@ -507,6 +490,7 @@ def solve_sequence(
         # garbage while the residual still converges — a silently wrong
         # "solution".  Stale mode never recomputes AW, so it must be fed.
         raise ValueError("refresh_aw='stale' with W0 requires AW0")
+    strategy = HarmonicRitz() if strategy is None else strategy
     make_op = make_operator if make_operator is not None else (lambda s: s)
 
     b0 = jax.tree_util.tree_map(lambda l: l[0], b_seq)
@@ -521,21 +505,28 @@ def solve_sequence(
         else AW0.astype(dtype)
     )
     x_init = jnp.zeros((n,), dtype)
+    drift_init = (
+        jnp.zeros((), dtype) if drift0 is None else drift0.astype(dtype)
+    )
 
     def body(carry, xs):
-        w, aw, x_prev = carry
+        w, aw, drift, x_prev = carry
         sys_i, b = xs
         A = make_op(sys_i)
         x0 = unravel(x_prev) if carry_x else None
+        M = (
+            make_preconditioner(A)
+            if make_preconditioner is not None
+            else None
+        )
         # Per-system semantics (refresh, accounting, extraction) live in
         # ONE place, shared with the single-system front door.
-        result, info, w2, aw2, theta = _one_recycled_solve(
+        one = functools.partial(
+            _one_recycled_solve,
             A,
             b,
             x0,
-            w,
-            aw,
-            unravel,
+            unravel=unravel,
             k=k,
             ell=ell,
             tol=tol,
@@ -544,20 +535,98 @@ def solve_sequence(
             select=select,
             waw_jitter=waw_jitter,
             refresh_aw=refresh_aw,
-            M=(
-                make_preconditioner(A)
-                if make_preconditioner is not None
-                else None
-            ),
+            strategy=strategy,
+            M=M,
+            batch_axis=batch_axis,
         )
-        x_flat = pt.ravel(result.x)
-        return (w2, aw2, x_flat), (result.x, info, theta)
+        result, info, w2, aw2, theta, drift2 = one(w, aw, drift)
 
-    (w_fin, aw_fin, _), (xs_out, infos, thetas) = jax.lax.scan(
-        body, (w_init, aw_init, x_init), (systems, b_seq)
+        if divergence_fallback:
+            # Residual-increase guard: a poisoned basis (breakdown, or a
+            # stall that never met tolerance) must not return garbage or
+            # hand the poison to the next system.  Re-solve THIS system
+            # with a zeroed basis — the cold-bootstrap path: exact no-op
+            # deflation plus recording, so the extraction re-seeds the
+            # sequence — charging the failed attempt's matvecs.
+            had_basis = jnp.any(w != 0)
+            bad = had_basis & (
+                info.breakdown | jnp.logical_not(info.converged)
+            )
+            if batch_axis is None:
+                any_bad = bad
+            else:
+                # Under solve_batch's vmap a batched predicate would
+                # lower the cond to a select — every tenant would pay the
+                # full second solve unconditionally.  Reduce across the
+                # tenant axis (unbatched → the cond survives batching)
+                # and mask the outcome per lane below.
+                any_bad = jax.lax.psum(bad.astype(jnp.int32), batch_axis) > 0
+
+            keep_out = (result.x, info, w2, aw2, theta, drift2)
+
+            def fallback(_):
+                zw = jnp.zeros_like(w)
+                r2, i2, w2b, aw2b, th2, d2 = one(
+                    zw, jnp.zeros_like(aw), jnp.zeros_like(drift)
+                )
+                # Both attempts were paid for — report them both.
+                i2 = i2._replace(matvecs=i2.matvecs + info.matvecs)
+                # `bad` without breakdown can also mean "genuinely hard
+                # system, maxiter bound" — there the warm iterate may be
+                # the better answer.  Keep whichever residual is smaller
+                # (a broken warm attempt has a huge/NaN norm and loses
+                # naturally), but always carry the fallback's freshly
+                # re-seeded basis and its honest matvec total.
+                warm_ok = jnp.isfinite(info.residual_norm) & (
+                    ~info.breakdown
+                )
+                cold_wins = (~warm_ok) | (
+                    i2.residual_norm < info.residual_norm
+                )
+                take = cold_wins & bad
+                x_sel = jax.tree_util.tree_map(
+                    lambda a, b_: jnp.where(take, a, b_), r2.x, result.x
+                )
+                i_sel = jax.tree_util.tree_map(
+                    lambda a, b_: jnp.where(bad, a, b_), i2, info
+                )
+                i_sel = i_sel._replace(
+                    residual_norm=jnp.where(
+                        take, i2.residual_norm, info.residual_norm
+                    ),
+                    iterations=jnp.where(
+                        take, i2.iterations, info.iterations
+                    ),
+                )
+                sel = lambda a, b_: jnp.where(bad, a, b_)  # noqa: E731
+                return (
+                    x_sel,
+                    i_sel,
+                    sel(w2b, w2),
+                    sel(aw2b, aw2),
+                    (
+                        None
+                        if th2 is None
+                        else sel(th2, theta)
+                    ),
+                    sel(d2, drift2),
+                )
+
+            x_out, info, w2, aw2, theta, drift2 = jax.lax.cond(
+                any_bad, fallback, lambda _: keep_out, None
+            )
+        else:
+            x_out = result.x
+
+        x_flat = pt.ravel(x_out)
+        return (w2, aw2, drift2, x_flat), (x_out, info, theta)
+
+    (w_fin, aw_fin, drift_fin, _), (xs_out, infos, thetas) = jax.lax.scan(
+        body, (w_init, aw_init, drift_init, x_init), (systems, b_seq)
     )
     return SequenceResult(
-        x=xs_out, info=infos, theta=thetas, W=w_fin, AW=aw_fin
+        x=xs_out, info=infos, theta=thetas, W=w_fin, AW=aw_fin,
+        drift=drift_fin,
     )
 
 
@@ -575,6 +644,9 @@ solve_sequence_jit = jax.jit(
         "waw_jitter",
         "refresh_aw",
         "carry_x",
+        "strategy",
+        "divergence_fallback",
+        "batch_axis",
     ),
 )
 
@@ -624,10 +696,18 @@ class RecycleManager:
       below catches exactly this — it re-solves clean and, since the
       accounting fix, reports the true total cost including the failed
       attempt.  Stale mode is exact (and safe) when the operator is
-      unchanged between systems — the multiple-RHS setting.
+      unchanged between systems — the multiple-RHS setting.  The
+      ``strategy`` field generalizes this switch:
+      :class:`repro.core.strategies.WindowedRecombine` is the guarded
+      stale mode (drift measured for free, refresh only when needed).
 
     ``reuse_aw=True`` on a call additionally declares the operator
     unchanged since the previous solve (multiple RHS against one matrix).
+
+    ``strategy`` selects the :class:`repro.core.strategies.RecycleStrategy`
+    owning the refresh decision (its host-side
+    ``manager_wants_refresh`` mirror) and the end-of-solve transition;
+    the strategy's drift measurement is carried in ``state.drift``.
 
     The manager carries a :class:`RecycleState` (flat ``(k, n)`` device
     arrays): it shards like the solution vector, persists on-device across
@@ -642,6 +722,7 @@ class RecycleManager:
     maxiter: int = 1000
     waw_jitter: float = DEFAULT_WAW_JITTER
     refresh_aw: str = "exact"  # "exact" | "stale" (see class docstring)
+    strategy: RecycleStrategy = HarmonicRitz()
     use_jit: bool = True
     state: Optional[RecycleState] = None
     systems_solved: int = 0
@@ -700,6 +781,7 @@ class RecycleManager:
             AW=jnp.zeros_like(w_flat) if aw_flat is None else aw_flat,
             theta=jnp.zeros((m,), w_flat.dtype),
             systems_solved=jnp.int32(self.systems_solved),
+            drift=jnp.zeros((), w_flat.dtype),
         )
         self._has_aw = aw_flat is not None
 
@@ -717,13 +799,33 @@ class RecycleManager:
     ) -> CGResult:
         tol = self.tol if tol is None else tol
         maxiter = self.maxiter if maxiter is None else maxiter
+        if self.strategy.needs_preconditioner and M is None:
+            # Without M the M-geometry transition would silently degrade
+            # to the Euclidean extraction — the SolveSpec path rejects
+            # this combination too (spec validation).
+            raise ValueError(
+                f"strategy={type(self.strategy).__name__} extracts in the "
+                "preconditioner's geometry — pass M to every solve()"
+            )
 
         w_flat = self.state.W if self.state is not None else None
         aw_flat = self.AW  # None when seeded without A-products
         # A basis with no A-products at all (seed() without AW) must be
         # refreshed even under reuse_aw — there is nothing to reuse.
+        # Otherwise the refresh decision belongs to the strategy (exact
+        # policy / drift guard / pure stale) — the host-side mirror of
+        # ``strategy.prepare`` on the device paths.
+        drift = (
+            self.state.drift if self.state is not None else jnp.float32(0.0)
+        )
         needs_fresh = w_flat is not None and (
-            aw_flat is None or (not reuse_aw and self.refresh_aw == "exact")
+            aw_flat is None
+            or (
+                not reuse_aw
+                and self.strategy.manager_wants_refresh(
+                    self.refresh_aw, drift, tol
+                )
+            )
         )
         if needs_fresh:
             _, unravel = pt.ravel_vector(b)
@@ -736,6 +838,7 @@ class RecycleManager:
             aw_flat = pt.ravel_basis(aw)
 
         solve_fn = defcg_jit if self.use_jit else defcg
+        exact_aw = needs_fresh or reuse_aw or w_flat is None
         result = solve_fn(
             A,
             b,
@@ -747,10 +850,20 @@ class RecycleManager:
             maxiter=maxiter,
             record_residuals=record_residuals,
             waw_jitter=self.waw_jitter,
-            exact_aw=needs_fresh or reuse_aw or w_flat is None,
+            exact_aw=exact_aw,
             flat_recycle=True,  # _refresh consumes (P, AP) flat
             M=M,
+            # A stale solve gets the strategy's in-solve drift guard —
+            # the same layer-2 protection the device paths arm through
+            # strategy.prepare (its k-matvec refresh is charged by defcg).
+            stale_guard=(
+                None if exact_aw else self.strategy.in_solve_guard(tol)
+            ),
         )
+        if result.recycle is not None and result.recycle.aw_used is not None:
+            # The in-solve guard may have refreshed — extract from what
+            # the solve actually deflated with.
+            aw_flat = result.recycle.aw_used
         # Charge what the refresh actually computed: a seeded basis may
         # hold fewer than self.k vectors.
         refresh_cost = w_flat.shape[0] if needs_fresh else 0
@@ -789,7 +902,7 @@ class RecycleManager:
                 )
             )
         self.systems_solved += 1
-        self._refresh(result, w_flat, aw_flat)
+        self._refresh(result, w_flat, aw_flat, b=b, M=M)
         return result
 
     # -- internal ----------------------------------------------------------
@@ -798,6 +911,9 @@ class RecycleManager:
         result: CGResult,
         w_flat: Optional[jnp.ndarray],
         aw_flat: Optional[jnp.ndarray],
+        *,
+        b: Pytree,
+        M=None,
     ) -> None:
         rec = result.recycle
         if rec is None:
@@ -812,22 +928,34 @@ class RecycleManager:
             # side of a completed computation — unlike the old path, it
             # gates no shapes and triggers no per-count recompiles.
             return
-        # Flat masked extraction: the dynamic stored count feeds the jitted
-        # extraction as a device scalar (the pre-flat-engine path
-        # static-sliced on it, recompiling for every distinct count).
+        # Strategy-owned transition on the flat masked extraction: the
+        # dynamic stored count feeds the jitted extraction as a device
+        # scalar (the pre-flat-engine path static-sliced on it,
+        # recompiling for every distinct count).
         P, AP = rec.P, rec.AP  # already flat (flat_recycle=True)
         k = min(self.k, P.shape[0] + (0 if w_flat is None else w_flat.shape[0]))
-        extract = (
-            _extract_next_basis_jit if self.use_jit else _extract_next_basis
-        )
-        W_new, AW_new, theta = extract(
-            w_flat, aw_flat, P, AP, rec.stored, k, select=self.select
-        )
+        if self.strategy.needs_preconditioner and M is not None:
+            # M-geometry needs the flat M⁻¹ apply — a per-call closure,
+            # so this path runs eagerly (the front doors jit it whole).
+            _, unravel = pt.ravel_vector(b)
+            W_new, AW_new, theta, drift = self.strategy.transition(
+                w_flat, aw_flat, rec, k=k, select=self.select,
+                m_apply=_flat_operator(M, unravel),
+            )
+        elif self.use_jit:
+            W_new, AW_new, theta, drift = _strategy_transition_jit(
+                self.strategy, w_flat, aw_flat, rec, k, self.select
+            )
+        else:
+            W_new, AW_new, theta, drift = self.strategy.transition(
+                w_flat, aw_flat, rec, k=k, select=self.select
+            )
         self.state = RecycleState(
             W=W_new,
             AW=AW_new,
             theta=theta,
             systems_solved=jnp.int32(self.systems_solved),
+            drift=drift,
         )
         self._has_aw = True
 
@@ -835,6 +963,15 @@ class RecycleManager:
 _extract_next_basis_jit = jax.jit(
     _extract_next_basis, static_argnames=("k", "select", "jitter")
 )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("strategy", "k", "select")
+)
+def _strategy_transition_jit(strategy, w_flat, aw_flat, window, k, select):
+    """Jitted strategy transition for the host-driven manager (strategies
+    are hashable static config; the window rides in as a traced pytree)."""
+    return strategy.transition(w_flat, aw_flat, window, k=k, select=select)
 
 
 def recycled_solve_jit(

@@ -44,6 +44,7 @@ import jax
 import jax.numpy as jnp
 from jax.scipy.linalg import cho_factor, cho_solve
 
+from repro.core import operators as ops_mod
 from repro.core import pytree as pt
 from repro.kernels import ops as kops
 
@@ -55,6 +56,14 @@ Pytree = Any
 # makes def-CG diverge with a well-converged Ritz basis (measured; see the
 # ``waw_jitter`` arg of :func:`defcg`).
 DEFAULT_WAW_JITTER = 1e-12
+
+# The ONE noise floor for drift-guard thresholds, in units of the working
+# dtype's eps: drift measurements (residual differences, gram asymmetry)
+# carry rounding-level terms even for an exactly unchanged operator
+# (~1e-16 in f64, ~1e-7 in f32), and a threshold below this floor would
+# buy k-matvec refreshes on pure noise.  Shared by defcg's in-solve
+# guard and every strategy-layer comparison (``repro.core.strategies``).
+DRIFT_NOISE_FLOOR_EPS = 500.0
 
 
 class SolveInfo(NamedTuple):
@@ -69,11 +78,28 @@ class SolveInfo(NamedTuple):
 
 
 class RecycleData(NamedTuple):
-    """Stored Krylov quantities for harmonic-Ritz extraction."""
+    """Stored Krylov quantities — the solver→strategy window handoff.
+
+    This is the contract between the def-CG scan phase and the
+    :mod:`repro.core.strategies` layer: everything a recycle strategy may
+    consume at the end-of-solve transition is recorded here, all of it
+    "readily available" (paper §2.3) — zero extra matvecs.
+    """
 
     P: Pytree  # basis of ell search directions
     AP: Pytree  # their A-products
     stored: jax.Array  # int32: valid columns (may be < ell on early converge)
+    # CG recurrence coefficients of the recorded iterations: ``alpha[j]``
+    # is the step size taken along ``P[j]``; ``beta[j]`` the direction
+    # coefficient computed at the END of iteration j (it builds p_{j+1}).
+    # Rows past ``stored`` are zero.  None when ``ell == 0``.
+    alpha: Optional[jax.Array] = None  # (ell,)
+    beta: Optional[jax.Array] = None  # (ell,)
+    # The (k, n) basis products the solve ACTUALLY deflated with — set
+    # only under ``stale_guard`` (flat recycle), where the in-solve guard
+    # may have replaced the caller's stale AW with a fresh ``A·W``: the
+    # extraction must recombine what was used, not what was passed.
+    aw_used: Optional[jax.Array] = None
 
 
 class CGResult(NamedTuple):
@@ -218,6 +244,8 @@ def defcg(
     exact_aw: bool = True,
     flat_recycle: bool = False,
     M: Optional[Callable[[Pytree], Pytree]] = None,
+    batch_axis: Optional[str] = None,
+    stale_guard: Optional[float] = None,
 ) -> CGResult:
     """Deflated CG — ``def-CG(k, ell)`` of the paper (k = basis size of W).
 
@@ -256,10 +284,35 @@ def defcg(
          cheap mode), the initial residual is recomputed with one true
          matvec instead of the ``r0 = r − AW c`` shortcut, keeping CG's
          convergence target exact while the deflation is approximate.
+      stale_guard: in-solve drift guard for the stale mode (requires
+         ``exact_aw=False``; ignored otherwise).  The stale setup already
+         computes both the shortcut residual ``r_s = r − AW·c`` and the
+         true ``r_t = b − A·x₀`` — their difference is exactly
+         ``(A·W − AW)·c``, a FREE measurement of how stale the products
+         are along the deflated direction, available BEFORE the first
+         iteration.  When ``‖r_t − r_s‖ / ‖r_init‖`` exceeds this
+         threshold, the setup refreshes ``AW = A·W`` (k matvecs, counted
+         in ``info.matvecs``) and redoes the deflated guess under a
+         ``lax.cond`` — stale deflation that would destabilize the
+         conjugacy recurrence is caught on the system it would break, at
+         zero cost when it would not.  (Under ``vmap`` the cond lowers to
+         a select, so a batched solve pays the refresh GEMM
+         unconditionally — same caveat as the cold-bootstrap refresh.)
       flat_recycle: return the recorded ``(P, AP)`` as raw flat
          ``(ell, n)`` arrays instead of unraveling them to the vector's
          pytree structure — the device-resident sequence engine consumes
          them flat, so the round-trip would be pure waste.
+      batch_axis: name of a ``vmap`` axis this solve is lifted over
+         (``solve_batch`` passes its tenant axis).  Used for the
+         all-tenants-converged early exit: the recording scan runs a
+         fixed ``ell`` steps, and under ``vmap`` its per-step
+         ``lax.cond`` matvec gate lowers to a ``select`` (both branches
+         execute) — so without this, every tenant pays ``ell`` matvecs
+         even after the whole batch converged.  With the axis name the
+         gate becomes a cross-tenant ``any(active)`` reduction, which is
+         unbatched, so the ``cond`` survives ``vmap`` and the operator is
+         skipped once EVERY lane is frozen.  ``None`` (default) keeps the
+         per-lane gate.
 
     Internals: the whole solve — setup (Wᵀ A W factorization, deflated
     initial guess) and iteration — runs on the flat engine: the vector
@@ -297,45 +350,104 @@ def defcg(
         # coordinates produces bit-identical iterates.
         k = pt.basis_size(W)
         w_flat = pt.ravel_basis(W)
+
+        def _apply_basis(w_f):
+            # One fused multi-RHS operator application (each K-tile /
+            # linearization formed once for all k vectors), not k
+            # sequential matvecs — same primitive as the refresh paths.
+            basis = pt.unravel_basis(w_f, unravel)
+            return pt.ravel_basis(ops_mod.apply_to_basis(A, basis))
+
         if AW is None:
-            aw_flat = jax.vmap(A_flat)(w_flat)
+            aw_flat = _apply_basis(w_flat)
             matvecs = matvecs + k
         else:
             aw_flat = pt.ravel_basis(AW)
-        waw = pt.gram(w_flat, aw_flat)
-        waw = 0.5 * (waw + waw.T)
-        dj = jnp.diag(waw)
-        tr = jnp.sum(dj)
-        if waw_jitter:
-            scale = jnp.where(tr > 0, tr / k, 1.0)
-            waw = waw + waw_jitter * scale * jnp.eye(k, dtype=waw.dtype)
-        # Exactly-zero columns (clamped extraction slots — see
-        # recycle.harmonic_ritz_flat) are regularized UNconditionally:
-        # Wᵀr = 0 there, so any positive diagonal entry yields the same
-        # deflation result (c_i = μ_i = 0) while keeping the Cholesky
-        # finite.  A no-op when no column is zero, whatever waw_jitter is.
-        waw = waw + jnp.diag(
-            jnp.where(dj == 0.0, jnp.maximum(tr / k, 1.0), 0.0)
-        )
-        waw_cho = cho_factor(waw)
 
-        r_init = b_flat - A_flat(x_flat)
+        def _factor_waw(aw_f):
+            waw = pt.gram(w_flat, aw_f)
+            waw = 0.5 * (waw + waw.T)
+            dj = jnp.diag(waw)
+            tr = jnp.sum(dj)
+            if waw_jitter:
+                scale = jnp.where(tr > 0, tr / k, 1.0)
+                waw = waw + waw_jitter * scale * jnp.eye(k, dtype=waw.dtype)
+            # Exactly-zero columns (clamped extraction slots — see
+            # recycle.harmonic_ritz_flat) are regularized UNconditionally:
+            # Wᵀr = 0 there, so any positive diagonal entry yields the
+            # same deflation result (c_i = μ_i = 0) while keeping the
+            # Cholesky finite.  A no-op when no column is zero, whatever
+            # waw_jitter is.
+            waw = waw + jnp.diag(
+                jnp.where(dj == 0.0, jnp.maximum(tr / k, 1.0), 0.0)
+            )
+            return cho_factor(waw)
+
+        def _post_guess(aw_f, waw_cho, z_f):
+            # Deflation in the preconditioned inner product: μ from (AW)ᵀz.
+            mu0 = cho_solve(waw_cho, pt.basis_dot(aw_f, z_f))
+            p0 = z_f - pt.basis_combine(w_flat, mu0)
+            # In-loop μ solves become one k×k GEMV: (WᵀAW)⁻¹ is formed
+            # once from the (jittered, equilibrated) Cholesky —
+            # numerically benign at these sizes, and it keeps LAPACK
+            # dispatches out of the loop.
+            winv = cho_solve(waw_cho, jnp.eye(k, dtype=aw_f.dtype))
+            return p0, winv
+
+        waw_cho = _factor_waw(aw_flat)
+        x_in = x_flat
+        r_init = b_flat - A_flat(x_in)
         matvecs = matvecs + 1
         x_flat, r_flat = deflated_initial_guess(
-            x_flat, r_init, w_flat, aw_flat, waw_cho
+            x_in, r_init, w_flat, aw_flat, waw_cho
         )
         if not exact_aw:
+            r_short = r_flat
             r_flat = b_flat - A_flat(x_flat)
             matvecs = matvecs + 1
+            if stale_guard is not None:
+                # In-solve drift guard: ‖r_true − r_short‖ = ‖(A·W − AW)c‖
+                # measures the staleness of AW along the deflated
+                # component — both residuals are already paid for.  Above
+                # the threshold, refresh AW = A·W and redo the deflated
+                # guess BEFORE iterating (a stale μ-recurrence diverges,
+                # it does not merely slow down).
+                drift_obs = pt.tree_norm(r_flat - r_short) / jnp.maximum(
+                    pt.tree_norm(r_init), jnp.finfo(r_init.dtype).tiny
+                )
+                # Floor the threshold above the WORKING dtype's rounding
+                # noise (the two residuals differ by ~eps-level terms
+                # even with an exact AW): without this, f32 solves would
+                # re-trigger k-matvec refreshes on pure noise.
+                guard_eff = jnp.maximum(
+                    jnp.asarray(stale_guard, drift_obs.dtype),
+                    DRIFT_NOISE_FLOOR_EPS * jnp.finfo(r_init.dtype).eps,
+                )
+                refresh = drift_obs > guard_eff
 
-        z_flat = precond(r_flat) if precond is not None else r_flat
-        # Deflation in the preconditioned inner product: μ from (AW)ᵀz.
-        mu0 = cho_solve(waw_cho, pt.basis_dot(aw_flat, z_flat))
-        p_flat = z_flat - pt.basis_combine(w_flat, mu0)
-        # In-loop μ solves become one k×k GEMV: (WᵀAW)⁻¹ is formed once
-        # from the (jittered, equilibrated) Cholesky — numerically benign
-        # at these sizes, and it keeps LAPACK dispatches out of the loop.
-        waw_inv = cho_solve(waw_cho, jnp.eye(k, dtype=waw.dtype))
+                def _refresh_setup(_):
+                    aw_n = _apply_basis(w_flat)
+                    cho_n = _factor_waw(aw_n)
+                    x_n, r_n = deflated_initial_guess(
+                        x_in, r_init, w_flat, aw_n, cho_n
+                    )
+                    z_n = precond(r_n) if precond is not None else r_n
+                    p_n, winv_n = _post_guess(aw_n, cho_n, z_n)
+                    return aw_n, x_n, r_n, z_n, p_n, winv_n
+
+                def _keep_setup(_):
+                    z_s = precond(r_flat) if precond is not None else r_flat
+                    p_s, winv_s = _post_guess(aw_flat, waw_cho, z_s)
+                    return aw_flat, x_flat, r_flat, z_s, p_s, winv_s
+
+                aw_flat, x_flat, r_flat, z_flat, p_flat, waw_inv = (
+                    jax.lax.cond(refresh, _refresh_setup, _keep_setup, None)
+                )
+                matvecs = matvecs + k * refresh.astype(matvecs.dtype)
+
+        if waw_inv is None:  # exact or unguarded-stale setup
+            z_flat = precond(r_flat) if precond is not None else r_flat
+            p_flat, waw_inv = _post_guess(aw_flat, waw_cho, z_flat)
     else:
         r_flat = b_flat - A_flat(x_flat)
         matvecs = matvecs + 1
@@ -371,7 +483,16 @@ def defcg(
         """
         j, x, r, p, rs, rnorm, trace, brk = state
         if gate_matvec:
-            ap = jax.lax.cond(active, A_flat, jnp.zeros_like, p)
+            if batch_axis is None:
+                run_mv = active
+            else:
+                # Cross-tenant gate: any(active) over the vmap axis is
+                # unbatched, so the cond survives batching and the matvec
+                # is skipped once EVERY tenant's lane is frozen.
+                run_mv = (
+                    jax.lax.psum(active.astype(jnp.int32), batch_axis) > 0
+                )
+            ap = jax.lax.cond(run_mv, A_flat, jnp.zeros_like, p)
         else:
             ap = A_flat(p)
         d = pt.tree_dot(p, ap)
@@ -415,29 +536,31 @@ def defcg(
             old = trace[j + 1]
             trace = trace.at[j + 1].set(jnp.where(active, rnorm, old))
         j = j + active.astype(j.dtype)
-        return (j, x, r, p, rs_new, rnorm, trace, brk), ap
+        return (j, x, r, p, rs_new, rnorm, trace, brk), (ap, alpha, beta)
 
     state = (
         jnp.int32(0), x_flat, r_flat, p_flat, rs0, rnorm0, trace0,
         jnp.bool_(False),
     )
 
-    p_rows = ap_rows = None
+    p_rows = ap_rows = a_rows = b_rows = None
     if ell > 0:
         # Recording phase: exactly ell scan steps whose stacked outputs are
-        # the (P, AP) record — each row is written once by the scan, so no
-        # (ell, n) buffer rides through loop state (XLA copies loop-carried
-        # buffers on masked dynamic row writes; scan outputs it writes in
-        # place).  Post-convergence steps contribute zero rows, matching
-        # the untouched tail of the seed's ring buffer.
+        # the (P, AP, α, β) record — each row is written once by the scan,
+        # so no (ell, n) buffer rides through loop state (XLA copies
+        # loop-carried buffers on masked dynamic row writes; scan outputs
+        # it writes in place).  Post-convergence steps contribute zero
+        # rows, matching the untouched tail of the seed's ring buffer.
         def scan_body(state, _):
             active = active_fn(state[0], state[5], state[7])
             p_row = jnp.where(active, state[3], 0.0)
-            state, ap = step(state, active, gate_matvec=True)
+            state, (ap, alpha, beta) = step(state, active, gate_matvec=True)
             ap_row = jnp.where(active, ap, 0.0)
-            return state, (p_row, ap_row)
+            a_row = jnp.where(active, alpha, 0.0)
+            b_row = jnp.where(active, beta, 0.0)
+            return state, (p_row, ap_row, a_row, b_row)
 
-        state, (p_rows, ap_rows) = jax.lax.scan(
+        state, (p_rows, ap_rows, a_rows, b_rows) = jax.lax.scan(
             scan_body, state, None, length=ell
         )
 
@@ -461,13 +584,20 @@ def defcg(
     if ell > 0:
         if flat_recycle:
             recycle = RecycleData(
-                P=p_rows, AP=ap_rows, stored=jnp.minimum(j, ell)
+                P=p_rows, AP=ap_rows, stored=jnp.minimum(j, ell),
+                alpha=a_rows, beta=b_rows,
+                aw_used=(
+                    aw_flat
+                    if (deflating and not exact_aw and stale_guard is not None)
+                    else None
+                ),
             )
         else:
             recycle = RecycleData(
                 P=pt.unravel_basis(p_rows, unravel),
                 AP=pt.unravel_basis(ap_rows, unravel),
                 stored=jnp.minimum(j, ell),
+                alpha=a_rows, beta=b_rows,
             )
     return CGResult(x=unravel(x), info=info, recycle=recycle)
 
@@ -532,5 +662,7 @@ defcg_jit = jax.jit(
         "waw_jitter",
         "exact_aw",
         "flat_recycle",
+        "batch_axis",
+        "stale_guard",
     ),
 )

@@ -111,7 +111,12 @@ def laplace_gpc(
         system's matvec count) and rebinds it to each system's drifting
         ``H½`` by a rank-r Woodbury solve
         (:func:`repro.core.kernel_nystrom_preconditioner`) — zero
-        operator matvecs per system, exact under drift.
+        operator matvecs per system, exact under drift.  The spec's
+        ``strategy`` rides along: ``WindowedRecombine`` runs the Newton
+        sequence at the paper's zero-refresh-matvec accounting (the drift
+        guard pays k matvecs only on the early, fast-moving Newton
+        steps), and ``MGeometryHarmonic`` + a preconditioner extracts in
+        the effective ``M⁻¹A`` geometry.
       precond_key: PRNG key for ``spec.precond="nystrom"``.
       newton_tol: stop when ΔΨ < newton_tol (paper used ΔΨ < 1).
       k_dense: pre-materialized K.  Required by the Cholesky path (built

@@ -519,6 +519,114 @@ def self_gram_chunked(s: jnp.ndarray, block: int = 8192) -> jnp.ndarray:
     return g
 
 
+# ---------------------------------------------------------------------------
+# recombine_blocks: [uᵀZ; uᵀAZ] from S = [Z; AZ] — the windowed refresh GEMM
+# ---------------------------------------------------------------------------
+#
+# The paper's zero-extra-matvec refresh rebuilds BOTH the next recycled
+# basis W' = uᵀZ and its operator products AW' = uᵀAZ from quantities the
+# solve already stored.  Doing it as one kernel over the stacked S = [Z; AZ]
+# (2m, n) reads the basis data once: each n-block loads the full (2m, bn)
+# column slab, applies uᵀ to each half on the MXU, and writes the (2k, bn)
+# output slab.  Output blocks are disjoint per grid step.
+
+
+def _recombine_blocks_kernel(ut_ref, s_ref, o_ref, *, m_pad, k_pad):
+    ut = ut_ref[...]  # (k_pad, m_pad) f32
+    sb = s_ref[...].astype(jnp.float32)  # (2·m_pad, bn)
+    top = jax.lax.dot_general(
+        ut, sb[:m_pad], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    bot = jax.lax.dot_general(
+        ut, sb[m_pad:], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[:k_pad] = top.astype(o_ref.dtype)
+    o_ref[k_pad:] = bot.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def recombine_blocks_pallas(
+    s: jnp.ndarray,
+    u: jnp.ndarray,
+    *,
+    block: int = 2048,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """``[uᵀ·S_top; uᵀ·S_bot]`` for ``S`` of shape ``(2m, n)``, ``u`` of
+    ``(m, k)`` — blocked over ``n``, f32 accumulation on the MXU.
+
+    Both halves are padded to an 8-row tile independently so the static
+    half split survives padding; zero pad rows/cols contribute exact
+    zeros and are sliced off the output.
+    """
+    m2, n = s.shape
+    m = m2 // 2
+    assert 2 * m == m2, "recombine_blocks needs an even (2m, n) stack"
+    k = u.shape[1]
+    m_pad = _round_up(max(m, 8), 8)
+    k_pad = _round_up(max(k, 8), 8)
+    bn = min(_round_up(block, _LANES), _round_up(n, _LANES))
+    n_pad = _round_up(n, bn)
+
+    s_p = jnp.concatenate(
+        [
+            jnp.pad(s[:m], ((0, m_pad - m), (0, n_pad - n))),
+            jnp.pad(s[m:], ((0, m_pad - m), (0, n_pad - n))),
+        ],
+        axis=0,
+    )
+    ut_p = jnp.pad(
+        u.astype(jnp.float32).T, ((0, k_pad - k), (0, m_pad - m))
+    )
+
+    out = pl.pallas_call(
+        functools.partial(_recombine_blocks_kernel, m_pad=m_pad, k_pad=k_pad),
+        grid=(n_pad // bn,),
+        in_specs=[
+            pl.BlockSpec((k_pad, m_pad), lambda j: (0, 0)),
+            pl.BlockSpec((2 * m_pad, bn), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((2 * k_pad, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((2 * k_pad, n_pad), s.dtype),
+        compiler_params=CompilerParams(dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+        name="recombine_blocks",
+    )(ut_p, s_p)
+    return jnp.concatenate(
+        [out[:k, :n], out[k_pad : k_pad + k, :n]], axis=0
+    )
+
+
+def recombine_blocks_chunked(
+    s: jnp.ndarray, u: jnp.ndarray, block: int = 8192
+) -> jnp.ndarray:
+    """Pure-jnp twin: one fused two-block GEMM when ``n ≤ block``, else a
+    scan over n-blocks with the kernel's blocking (bounded live memory)."""
+    m2, n = s.shape
+    m = m2 // 2
+    acc = _acc(s.dtype)
+    ut = u.astype(acc).T  # (k, m)
+    if n <= block:
+        sa = s.astype(acc)
+        return jnp.concatenate([ut @ sa[:m], ut @ sa[m:]], axis=0).astype(
+            s.dtype
+        )
+    n_pad = _round_up(n, block)
+    sp = jnp.pad(s, ((0, 0), (0, n_pad - n))).astype(acc)
+    blocks = sp.reshape(m2, n_pad // block, block).transpose(1, 0, 2)
+
+    def body(_, sb):
+        return None, jnp.concatenate([ut @ sb[:m], ut @ sb[m:]], axis=0)
+
+    _, outs = jax.lax.scan(body, None, blocks)
+    k = u.shape[1]
+    return (
+        outs.transpose(1, 0, 2).reshape(2 * k, n_pad)[:, :n].astype(s.dtype)
+    )
+
+
 def fused_deflate_direction_chunked(
     r, p, beta, w=None, mu=None, ap=None, idx=None, p_buf=None, ap_buf=None
 ):

@@ -33,6 +33,8 @@ from repro.kernels.cg_fused import (
     fused_deflate_direction_pallas,
     fused_rz_reduce_chunked,
     fused_rz_reduce_pallas,
+    recombine_blocks_chunked,
+    recombine_blocks_pallas,
     self_gram_chunked,
     self_gram_pallas,
 )
@@ -235,6 +237,34 @@ def self_gram(
         return ref.self_gram(s)
     if impl == "chunked":
         return self_gram_chunked(s, block)
+    raise ValueError(f"unknown impl={impl!r}")
+
+
+def recombine_blocks(
+    s: jnp.ndarray,
+    u: jnp.ndarray,
+    *,
+    impl: str = "auto",
+    block: int = 8192,
+) -> jnp.ndarray:
+    """``[uᵀ·S_top; uᵀ·S_bot]`` — the stacked two-block recombination GEMM.
+
+    ``s`` stacks two row-bases ``S = [Z; AZ]`` of shape ``(2m, n)``;
+    ``u`` is the ``(m, k)`` recombination matrix from the extraction
+    eigenproblem.  The result ``(2k, n)`` holds the next recycled basis
+    ``W' = uᵀZ`` and its operator products ``AW' = uᵀAZ``, rebuilt from
+    already-stored quantities in ONE pass over the basis data — the
+    paper's zero-extra-matvec refresh (``core/strategies.py``).
+    """
+    impl = _resolve(impl)
+    if impl in ("pallas", "interpret"):
+        return recombine_blocks_pallas(
+            s, u, block=min(block, 2048), interpret=(impl == "interpret")
+        )
+    if impl == "reference":
+        return ref.recombine_blocks(s, u)
+    if impl == "chunked":
+        return recombine_blocks_chunked(s, u, block)
     raise ValueError(f"unknown impl={impl!r}")
 
 

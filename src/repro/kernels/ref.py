@@ -84,6 +84,29 @@ def fused_deflate_direction(
     return p_new, p_buf, ap_buf
 
 
+def recombine_blocks(s: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """Semantic definition of the stacked two-block recombination GEMM.
+
+    ``s`` is a ``(2m, n)`` stack of two row-bases ``[Z; AZ]`` and ``u`` an
+    ``(m, k)`` recombination matrix; the result is the ``(2k, n)`` stack
+    ``[uᵀ Z; uᵀ AZ]`` — both the next recycled basis ``W' = uᵀZ`` and its
+    operator products ``AW' = uᵀAZ`` rebuilt from already-stored
+    quantities in ONE pass over the basis data (the paper's zero-extra-
+    matvec refresh; see ``core/strategies.py``).  Accumulates in at least
+    f32 (f64-preserving).
+    """
+    m = u.shape[0]
+    acc = (
+        jnp.float64 if s.dtype == jnp.float64
+        else jnp.promote_types(s.dtype, jnp.float32)
+    )
+    ua = u.astype(acc)
+    sa = s.astype(acc)
+    return jnp.concatenate([ua.T @ sa[:m], ua.T @ sa[m:]], axis=0).astype(
+        s.dtype
+    )
+
+
 def self_gram(s: jnp.ndarray) -> jnp.ndarray:
     """Semantic definition of the stacked self-Gram ``S Sᵀ``.
 

@@ -31,7 +31,14 @@ from typing import Any, Callable, NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import GGNOperator, RecycleState, SolveSpec, solve
+from repro.core import (
+    GGNOperator,
+    HarmonicRitz,
+    RecycleState,
+    RecycleStrategy,
+    SolveSpec,
+    solve,
+)
 from repro.core import pytree as pt
 from repro.core.recycle import random_orthonormal_basis
 
@@ -49,6 +56,12 @@ class HFConfig:
     min_damping: float = 1e-6
     max_damping: float = 1e6
     recycle: bool = True  # False → plain CG baseline (paper comparison)
+    # Recycle strategy for the Newton sequence of GGN systems.  The GGN
+    # matvec is ~3 forward passes, so WindowedRecombine's zero-matvec
+    # refresh (k model linearizations saved per step, drift-guarded) is
+    # the natural choice once damping stabilizes; HarmonicRitz is the
+    # conservative default.
+    strategy: RecycleStrategy = HarmonicRitz()
 
     def solve_spec(self) -> SolveSpec:
         """The inner solver's configuration as the shared SolveSpec."""
@@ -58,6 +71,7 @@ class HFConfig:
             ell=self.ell if self.recycle else 0,
             tol=self.cg_tol,
             maxiter=self.cg_maxiter,
+            strategy=self.strategy,
         )
 
 
@@ -80,6 +94,7 @@ def hf_init(params: Pytree, cfg: HFConfig, key) -> HFState:
             AW=jnp.zeros_like(w_flat),
             theta=jnp.zeros((cfg.k,), w_flat.dtype),
             systems_solved=jnp.int32(0),
+            drift=jnp.zeros((), w_flat.dtype),
         ),
         delta_prev=pt.tree_zeros_like(params),
         damping=jnp.float32(cfg.init_damping),

@@ -10,7 +10,7 @@ here and has to update the snapshot EXPLICITLY — with a reviewable diff.
 import dataclasses
 
 import repro.core as core
-from repro.core import SolveSpec
+from repro.core import HarmonicRitz, SolveSpec
 from repro.core.solvers import DEFAULT_WAW_JITTER
 
 # Alphabetical snapshot of the public surface.  Additions are fine (update
@@ -62,6 +62,11 @@ EXPECTED_CORE_ALL = sorted(
         "cholesky_solve",
         "defcg",
         "deflated_initial_guess",
+        # recycle strategies (ISSUE 5: the extraction/refresh axis)
+        "HarmonicRitz",
+        "MGeometryHarmonic",
+        "RecycleStrategy",
+        "WindowedRecombine",
     ]
 )
 
@@ -79,6 +84,7 @@ EXPECTED_SOLVESPEC_FIELDS = {
     "precond": "none",
     "precond_rank": 16,
     "precond_sigma": 1.0,
+    "strategy": HarmonicRitz(),
 }
 
 

@@ -195,6 +195,44 @@ class TestSelfGram:
         )
 
 
+class TestRecombineBlocks:
+    """Oracle parity for the stacked two-block recombination GEMM
+    (``[uᵀZ; uᵀAZ]`` — the strategies' zero-matvec windowed refresh)."""
+
+    # (m, k, n, block): aligned, ragged everything, k > m pad edge, n < block
+    CASES = [(16, 8, 4096, 2048), (20, 6, 1000, 512), (5, 3, 130, 2048),
+             (13, 13, 257, 128)]
+
+    @pytest.mark.parametrize("impl", ["interpret", "chunked"])
+    @pytest.mark.parametrize("case", CASES)
+    def test_matches_oracle(self, impl, case):
+        m, k, n, block = case
+        rng = np.random.default_rng(m * n + k)
+        s = jnp.asarray(rng.standard_normal((2 * m, n)), F32)
+        u = jnp.asarray(rng.standard_normal((m, k)), F32)
+        want = ref.recombine_blocks(s, u)
+        got = ops.recombine_blocks(s, u, impl=impl, block=block)
+        assert got.shape == (2 * k, n)
+        scale = max(1.0, float(jnp.max(jnp.abs(want))))
+        np.testing.assert_allclose(
+            np.asarray(got) / scale, np.asarray(want) / scale,
+            rtol=2e-4, atol=2e-4, err_msg=f"{impl} m={m} k={k} n={n}",
+        )
+
+    def test_chunked_f64_is_exact(self):
+        """Chunked must keep f64 accumulation (extraction parity at 1e-10
+        rides on W' = uᵀZ being exact in x64 mode)."""
+        rng = np.random.default_rng(11)
+        s = jnp.asarray(rng.standard_normal((24, 5000)))
+        u = jnp.asarray(rng.standard_normal((12, 5)))
+        got = ops.recombine_blocks(s, u, impl="chunked", block=512)
+        want = ref.recombine_blocks(s, u)
+        assert got.dtype == jnp.float64
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-12, atol=1e-12
+        )
+
+
 # ---------------------------------------------------------------------------
 # 2. flat engine vs the seed pytree loop, on an RBF GP Newton system
 # ---------------------------------------------------------------------------
