@@ -1,0 +1,129 @@
+"""Chaos benchmarks: what fault tolerance costs (ISSUE 6 acceptance).
+
+Three numbers on one drifting GP Newton sequence:
+
+* ``seq/chaos_clean_overhead`` — the armed recovery ladder vs the same
+  scan with recovery disarmed, on a HEALTHY sequence.  The ladder is a
+  zero-iteration ``lax.while_loop`` on the clean path, so per-system
+  iteration counts must be IDENTICAL (recorded in ``derived``) and the
+  wall-clock delta is dispatch noise.
+* ``seq/chaos_recovery`` — the same sequence with one persistently
+  NaN-poisoned system: the honest price of detection + the full ladder
+  climb + retirement, as extra matvecs and extra wall-clock over clean.
+* ``seq/chaos_checkpoint_overhead`` — the crash-resumable chunked driver
+  (checkpoint every 2 systems, blocking saves) vs the single
+  uninterrupted scan.
+"""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, gpc_problem, log, timed
+from repro.checkpoint import CheckpointManager
+from repro.core import (
+    FaultInjectingOperator,
+    KernelSystemOperator,
+    SolveSpec,
+    SolveStatus,
+    solve_sequence,
+)
+
+
+def _newton_trace(num_systems=4, seed=0):
+    """Drifting H½ Newton-style systems over the chunked Gram matvec."""
+    x, _, kernel = gpc_problem(None, seed=seed)
+    n = x.shape[0]
+    k_mv = kernel.matvec_fn(x, impl="chunked", block=256)
+    rng = np.random.default_rng(seed + 1)
+    fs = jnp.asarray(rng.standard_normal((num_systems, n)) * 0.5)
+    pis = jax.nn.sigmoid(fs)
+    sqrt_hs = jnp.sqrt(pis * (1.0 - pis))
+    bs = jnp.asarray(rng.standard_normal((num_systems, n)))
+    return KernelSystemOperator(k_mv, sqrt_hs), bs, n
+
+
+def run(num_systems=4, k=8, ell=12, tol=1e-5, maxiter=400):
+    ops, bs, n = _newton_trace(num_systems)
+    spec = SolveSpec(k=k, ell=ell, tol=tol, maxiter=maxiter)
+
+    def run_clean(armed=True):
+        return solve_sequence(ops, bs, spec, divergence_fallback=armed)
+
+    clean, t_clean = timed(run_clean, warmup=1, repeats=3)
+    disarmed, t_disarmed = timed(run_clean, False, warmup=1, repeats=3)
+    it_armed = [int(v) for v in np.asarray(clean.info.iterations)]
+    it_off = [int(v) for v in np.asarray(disarmed.info.iterations)]
+    mv_clean = int(np.asarray(clean.info.matvecs).sum())
+    unchanged = it_armed == it_off and bool(
+        (np.asarray(clean.report.rung) == 0).all()
+    )
+    us_clean = t_clean * 1e6 / num_systems
+    us_off = t_disarmed * 1e6 / num_systems
+    log(f"[chaos] clean n={n}: armed {us_clean:.0f} us/system vs disarmed "
+        f"{us_off:.0f} (iters unchanged={unchanged}, {it_armed})")
+    emit("seq/chaos_clean_overhead", us_clean - us_off,
+         f"n={n};iters_unchanged={unchanged};"
+         f"iters={'/'.join(map(str, it_armed))};"
+         f"armed_us={us_clean:.0f};disarmed_us={us_off:.0f}")
+
+    # One persistently-broken system mid-trace: detection + full ladder
+    # + retirement, honestly charged.
+    poison = jnp.zeros(num_systems, bs.dtype).at[1].set(jnp.nan)
+    faulty_ops = FaultInjectingOperator(ops, poison)
+
+    def run_faulty():
+        return solve_sequence(faulty_ops, bs, spec)
+
+    chaos, t_chaos = timed(run_faulty, warmup=1, repeats=3)
+    status = [SolveStatus.describe(s) for s in np.asarray(chaos.report.status)]
+    rungs = [int(v) for v in np.asarray(chaos.report.rung)]
+    mv_chaos = int(np.asarray(chaos.info.matvecs).sum())
+    finite = bool(jnp.all(jnp.isfinite(chaos.x)))
+    healthy_ok = bool(
+        np.asarray(chaos.info.converged)[
+            [i for i in range(num_systems) if i != 1]
+        ].all()
+    )
+    us_chaos = t_chaos * 1e6 / num_systems
+    log(f"[chaos] poisoned system 1: statuses {status} rungs {rungs}; "
+        f"matvecs {mv_clean} -> {mv_chaos} (+{mv_chaos - mv_clean} "
+        f"recovery); finite={finite} neighbors_converged={healthy_ok}")
+    emit("seq/chaos_recovery", us_chaos - us_clean,
+         f"n={n};extra_matvecs={mv_chaos - mv_clean};"
+         f"rungs={'/'.join(map(str, rungs))};finite={finite};"
+         f"neighbors_converged={healthy_ok}")
+
+    # Crash-resumable chunked driver vs the uninterrupted scan.
+    ckpt_dir = tempfile.mkdtemp(prefix="chaos_ckpt_")
+    try:
+        def run_chunked():
+            return solve_sequence(
+                ops, bs, spec,
+                checkpoint=CheckpointManager(ckpt_dir),
+                checkpoint_every=2,
+            )
+
+        chunked, t_chunk = timed(run_chunked, warmup=1, repeats=3)
+        parity = it_armed == [
+            int(v) for v in np.asarray(chunked.info.iterations)
+        ]
+        us_chunk = t_chunk * 1e6 / num_systems
+        log(f"[chaos] chunked+checkpointed {us_chunk:.0f} us/system vs "
+            f"scan {us_clean:.0f} (iterate parity={parity})")
+        emit("seq/chaos_checkpoint_overhead", us_chunk - us_clean,
+             f"n={n};chunk=2;parity={parity};chunked_us={us_chunk:.0f};"
+             f"scan_us={us_clean:.0f}")
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+    return unchanged and finite and healthy_ok
+
+
+if __name__ == "__main__":
+    run()

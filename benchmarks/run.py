@@ -12,6 +12,9 @@ Sections:
   seq      — sequence engine: extraction+refresh overhead, device scan,
              and the recycle-strategy matrix (iterations × matvecs for
              harmonic/windowed/mgeometry on a drifting GP Newton sequence)
+  seq/chaos— fault-tolerance cost: clean-path ladder overhead (must be
+             iterate-identical), recovery price under an injected NaN
+             system, and the chunked checkpoint driver's overhead
   batch    — multi-tenant solve_batch vs sequential loop (B ∈ {1, 8, 64})
   hf       — Hessian-free recycling at mini-LM scale
   kernel   — fused-kernel micro-benchmarks
@@ -48,6 +51,7 @@ def main() -> None:
 
     from benchmarks import (
         batch_bench,
+        chaos_bench,
         hf_recycle_bench,
         kernel_bench,
         paper_fig4,
@@ -62,6 +66,7 @@ def main() -> None:
     section("fig4", paper_fig4.run)
     section("micro", solver_microbench.run)
     section("seq", seq_bench.run)
+    section("seq/chaos", chaos_bench.run)
     section("batch", batch_bench.run)
     section("hf", hf_recycle_bench.run)
     section("kernel", kernel_bench.run)

@@ -24,9 +24,11 @@ save to bound memory.
 from __future__ import annotations
 
 import json
+import logging
 import os
 import shutil
 import threading
+import warnings
 from typing import Any, Optional
 
 import jax
@@ -35,6 +37,16 @@ import numpy as np
 Pytree = Any
 
 _SEP = "|"
+
+logger = logging.getLogger(__name__)
+
+# Manifest schema history:
+#   1 (implicit — pre-"schema_version" manifests): exact name-list match
+#     required on restore.
+#   2: adds "schema_version"; restore matches leaves BY NAME, defaulting
+#     template leaves absent from the checkpoint (forward migration for
+#     state pytrees that grew fields — e.g. RecycleState gaining `drift`).
+SCHEMA_VERSION = 2
 
 
 def _flatten_with_names(tree: Pytree):
@@ -67,6 +79,7 @@ def save_pytree(tree: Pytree, directory: str, step: int, extra: Optional[dict] =
         "names": names,
         "count": len(names),
         "extra": extra or {},
+        "schema_version": SCHEMA_VERSION,
     }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
@@ -82,15 +95,37 @@ def restore_pytree(
     shardings: Optional[Pytree] = None,
 ) -> Pytree:
     """Restore into the structure of ``template``; optionally re-shard every
-    leaf onto the current mesh (elastic restore)."""
+    leaf onto the current mesh (elastic restore).
+
+    Leaves are matched BY NAME (the keystr path recorded in the
+    manifest), not by position.  A template leaf *missing* from the
+    checkpoint keeps its template value — with a warning — so a state
+    pytree that grew a field since the checkpoint was written (schema
+    migration, e.g. ``RecycleState.drift`` added in a later version)
+    restores instead of being rejected as corrupt.  A checkpoint leaf
+    with no home in the template is still a hard ``ValueError``: dropping
+    saved state silently is never safe.
+    """
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     data = np.load(os.path.join(path, "arrays.npz"))
     names, t_leaves, treedef = _flatten_with_names(template)
-    if manifest["names"] != names:
+    saved_index = {name: i for i, name in enumerate(manifest["names"])}
+    unknown = [n for n in manifest["names"] if n not in set(names)]
+    if unknown:
         raise ValueError(
-            "checkpoint/template structure mismatch: "
-            f"{len(manifest['names'])} vs {len(names)} leaves"
+            "checkpoint/template structure mismatch: checkpoint leaves "
+            f"{unknown[:5]} have no home in the template "
+            f"({len(manifest['names'])} saved vs {len(names)} template leaves)"
+        )
+    missing = [n for n in names if n not in saved_index]
+    if missing:
+        warnings.warn(
+            f"checkpoint at {path} (schema_version="
+            f"{manifest.get('schema_version', 1)}) lacks "
+            f"{len(missing)} template leaves {missing[:5]} — defaulting "
+            "them from the template (schema migration)",
+            stacklevel=2,
         )
     leaves = []
     s_leaves = (
@@ -100,8 +135,11 @@ def restore_pytree(
         if shardings is not None
         else [None] * len(names)
     )
-    for i, (tmpl, shd) in enumerate(zip(t_leaves, s_leaves)):
-        arr = data[f"a{i}"]
+    for name, tmpl, shd in zip(names, t_leaves, s_leaves):
+        if name not in saved_index:
+            leaves.append(tmpl)  # grown-field default: the template value
+            continue
+        arr = data[f"a{saved_index[name]}"]
         if hasattr(tmpl, "dtype"):
             import ml_dtypes  # noqa: F401 — registers bf16 numpy casts
 
@@ -114,13 +152,28 @@ def restore_pytree(
 
 
 class CheckpointManager:
-    """Versioned checkpoints with retention, resume, and async writes."""
+    """Versioned checkpoints with retention, resume, and async writes.
+
+    Failure-handling contract:
+
+    * an exception inside a background ``save(..., blocking=False)``
+      thread does NOT vanish — it is captured and re-raised from the next
+      :meth:`wait` or :meth:`save`, so a failed write cannot masquerade
+      as a committed checkpoint;
+    * :meth:`restore_latest` records every checkpoint it had to skip as
+      corrupt/incomplete in :attr:`last_skipped` (a ``[(step, reason)]``
+      list, also logged) — corrupt-tail recovery is visible, not silent.
+    """
 
     def __init__(self, directory: str, keep: int = 3):
         self.directory = directory
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
+        self._async_error: Optional[BaseException] = None
+        # (step, reason) for every checkpoint the last restore_latest
+        # call skipped as unreadable, newest first.
+        self.last_skipped: list = []
 
     # -- writing ----------------------------------------------------------
     def save(self, tree: Pytree, step: int, *, extra: Optional[dict] = None,
@@ -128,13 +181,18 @@ class CheckpointManager:
         tree = jax.device_get(tree)  # snapshot before the next step mutates
 
         def work():
-            save_pytree(tree, self.directory, step, extra)
-            self._gc()
+            try:
+                save_pytree(tree, self.directory, step, extra)
+                self._gc()
+            except BaseException as exc:  # surfaced by the next wait()/save()
+                self._async_error = exc
 
         if blocking:
-            work()
+            self._raise_pending()
+            save_pytree(tree, self.directory, step, extra)
+            self._gc()
         else:
-            self.wait()
+            self.wait()  # joins the previous write AND raises its failure
             self._thread = threading.Thread(target=work, daemon=True)
             self._thread.start()
 
@@ -142,6 +200,15 @@ class CheckpointManager:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        self._raise_pending()
+
+    def _raise_pending(self):
+        if self._async_error is not None:
+            exc, self._async_error = self._async_error, None
+            raise RuntimeError(
+                "async checkpoint save failed (the checkpoint was NOT "
+                "committed)"
+            ) from exc
 
     # -- reading ----------------------------------------------------------
     def steps(self):
@@ -157,8 +224,14 @@ class CheckpointManager:
     def restore_latest(
         self, template: Pytree, shardings: Optional[Pytree] = None
     ):
-        """Newest restorable checkpoint (corrupt tails skipped) or None."""
+        """Newest restorable checkpoint (corrupt tails skipped) or None.
+
+        Every skipped checkpoint is recorded in ``self.last_skipped`` as a
+        ``(step, reason)`` pair (newest first) and logged, so a corrupt
+        tail is observable rather than silently walked past.
+        """
         self.wait()
+        self.last_skipped = []
         for step in reversed(self.steps()):
             path = os.path.join(self.directory, f"step_{step:08d}")
             try:
@@ -166,8 +239,14 @@ class CheckpointManager:
                 with open(os.path.join(path, "manifest.json")) as f:
                     extra = json.load(f).get("extra", {})
                 return step, tree, extra
-            except Exception:
-                continue  # corrupt/incomplete — try the previous one
+            except Exception as exc:  # corrupt/incomplete — try the previous one
+                reason = f"{type(exc).__name__}: {exc}"
+                self.last_skipped.append((step, reason))
+                logger.warning(
+                    "skipping unreadable checkpoint step %d at %s (%s)",
+                    step, path, reason,
+                )
+                continue
         return None
 
     def _gc(self):

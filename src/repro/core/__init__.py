@@ -11,6 +11,7 @@ conveniences and compatibility shims over the same engine.
 from repro.core.api import (
     BatchSolveResult,
     SequenceSolveResult,
+    SolveReport,
     SolveResult,
     SolveSpec,
     make_preconditioner,
@@ -20,6 +21,7 @@ from repro.core.api import (
     solve_jit,
     solve_sequence,
 )
+from repro.core.faults import FaultInjectingOperator, truncate_latest_checkpoint
 from repro.core.operators import (
     GGNOperator,
     KernelSystemOperator,
@@ -39,6 +41,7 @@ from repro.core.preconditioners import (
     randomized_nystrom,
 )
 from repro.core.recycle import (
+    MAX_RECOVERY_RUNGS,
     RecycleManager,
     RecycleState,
     SequenceResult,
@@ -53,6 +56,7 @@ from repro.core.solvers import (
     CGResult,
     RecycleData,
     SolveInfo,
+    SolveStatus,
     cg,
     cholesky_solve,
     defcg,
@@ -68,6 +72,7 @@ from repro.core.strategies import (
 __all__ = [
     "BatchSolveResult",
     "SequenceSolveResult",
+    "SolveReport",
     "SolveResult",
     "SolveSpec",
     "make_preconditioner",
@@ -76,6 +81,8 @@ __all__ = [
     "solve_batch_jit",
     "solve_jit",
     "solve_sequence",
+    "FaultInjectingOperator",
+    "truncate_latest_checkpoint",
     "GGNOperator",
     "KernelSystemOperator",
     "LinearOperator",
@@ -90,6 +97,7 @@ __all__ = [
     "kernel_nystrom_preconditioner",
     "nystrom_preconditioner",
     "randomized_nystrom",
+    "MAX_RECOVERY_RUNGS",
     "RecycleManager",
     "RecycleState",
     "SequenceResult",
@@ -102,6 +110,7 @@ __all__ = [
     "CGResult",
     "RecycleData",
     "SolveInfo",
+    "SolveStatus",
     "cg",
     "cholesky_solve",
     "defcg",

@@ -109,6 +109,27 @@ class SolveSpec:
         :func:`make_preconditioner` and pass it as ``M``.
       precond_rank: sketch rank for ``"nystrom"``.
       precond_sigma: bulk shift σ for the Nyström formula.
+      recovery_rungs: how far the escalating recovery ladder may climb
+        when a def-CG attempt ends broken (``SolveStatus`` ≥ 2) or
+        unconverged with a carried basis: 1 = refresh ``AW = A·W`` and
+        redo, 2 = + drop the basis (cold re-solve + re-seed), 3 = + plain
+        CG against ``A + σI`` with the preconditioner disabled (last
+        resort for a numerically indefinite operator).  0 disarms
+        recovery entirely.  Every executed attempt's matvecs are charged
+        to ``info.matvecs``; the rung taken is reported in
+        ``result.report.rung``.  The ladder is one ``lax.while_loop``
+        that runs zero iterations on a clean solve — clean-path iterates
+        and matvec totals are untouched.
+      recovery_shift: the σ of the rung-3 shift, relative to nothing —
+        an absolute diagonal offset (the escalated-jitter analog at the
+        operator level).  Keep it far below the operator's smallest
+        eigenvalue of interest; it biases the rung-3 solution by
+        ``O(σ‖x‖)``.
+      stagnation_window: > 0 arms the stalled-residual detector: a solve
+        whose best ‖r‖ fails to improve by 1% over this many consecutive
+        iterations stops with STAGNATED status (and, with recovery
+        armed, climbs the ladder) instead of burning the rest of
+        ``maxiter``.  0 (default) adds no loop state and no checks.
     """
 
     method: str = "defcg"
@@ -124,6 +145,9 @@ class SolveSpec:
     precond_rank: int = 16
     precond_sigma: float = 1.0
     strategy: RecycleStrategy = HarmonicRitz()
+    recovery_rungs: int = 3
+    recovery_shift: float = 1e-6
+    stagnation_window: int = 0
 
     def __post_init__(self):
         if self.method not in _METHODS:
@@ -144,6 +168,15 @@ class SolveSpec:
             raise ValueError("ell >= 0, maxiter >= 1, precond_rank >= 1 required")
         if self.tol < 0 or self.atol < 0 or self.waw_jitter < 0:
             raise ValueError("tol, atol and waw_jitter must be non-negative")
+        if not 0 <= self.recovery_rungs <= recycle_mod.MAX_RECOVERY_RUNGS:
+            raise ValueError(
+                f"recovery_rungs must be in [0, "
+                f"{recycle_mod.MAX_RECOVERY_RUNGS}], got {self.recovery_rungs}"
+            )
+        if self.recovery_shift < 0 or self.stagnation_window < 0:
+            raise ValueError(
+                "recovery_shift and stagnation_window must be non-negative"
+            )
         if not isinstance(self.strategy, RecycleStrategy):
             raise ValueError(
                 "strategy must be a repro.core.strategies.RecycleStrategy "
@@ -179,12 +212,45 @@ class SolveSpec:
             )
 
 
+class SolveReport(NamedTuple):
+    """Failure-handling diagnostics of a solve — one per front door.
+
+    A small pytree of traced values (per-system / per-tenant stacked on
+    the sequence and batch doors):
+
+    Attributes:
+      status: int32 :class:`repro.core.solvers.SolveStatus` code of the
+        ADOPTED attempt (CONVERGED / MAXITER / BREAKDOWN_NONFINITE /
+        BREAKDOWN_INDEFINITE / STAGNATED).
+      rung: int32 highest recovery-ladder rung executed (0 = clean solve,
+        ladder never fired; see ``SolveSpec.recovery_rungs``).
+      guard_firings: int32 count of in-solve stale-guard ``AW`` refreshes.
+      matvecs: honest total operator applications, including every failed
+        ladder attempt and every guard/ladder refresh.
+    """
+
+    status: jax.Array
+    rung: jax.Array
+    guard_firings: jax.Array
+    matvecs: jax.Array
+
+
+def _make_report(info: SolveInfo, rung) -> SolveReport:
+    return SolveReport(
+        status=jnp.asarray(info.status, jnp.int32),
+        rung=jnp.asarray(rung, jnp.int32),
+        guard_firings=jnp.asarray(info.guard_fired, jnp.int32),
+        matvecs=jnp.asarray(info.matvecs, jnp.int32),
+    )
+
+
 class SolveResult(NamedTuple):
     """What :func:`solve` returns: solution, diagnostics, next state."""
 
     x: Pytree
     info: SolveInfo
     state: Optional[RecycleState]
+    report: Optional[SolveReport] = None
 
 
 class SequenceSolveResult(NamedTuple):
@@ -194,17 +260,22 @@ class SequenceSolveResult(NamedTuple):
     info: SolveInfo  # stacked diagnostics
     theta: jnp.ndarray  # (num_systems, k) Ritz-value trace
     state: RecycleState  # final state, ready to seed the next call
+    report: Optional[SolveReport] = None  # per-system failure diagnostics
 
 
 class BatchSolveResult(NamedTuple):
     """Per-tenant stacked outputs of :func:`solve_batch` (leading axis B).
 
-    ``info.converged`` is the per-tenant convergence mask.
+    ``info.converged`` is the per-tenant convergence mask;
+    ``report.status`` is the per-tenant (or ``(B, N)`` per-system)
+    failure status — a broken tenant is retired into its slot of this
+    report instead of poisoning the batch.
     """
 
     x: Pytree
     info: SolveInfo
     state: Optional[RecycleState]
+    report: Optional[SolveReport] = None
 
 
 def make_preconditioner(
@@ -308,8 +379,14 @@ def solve(
             maxiter=spec.maxiter,
             M=M,
             record_residuals=record_residuals,
+            stagnation_window=spec.stagnation_window,
         )
-        return SolveResult(x=res.x, info=res.info, state=state)
+        return SolveResult(
+            x=res.x,
+            info=res.info,
+            state=state,
+            report=_make_report(res.info, 0),
+        )
 
     b_flat, unravel = pt.ravel_vector(b)
     n = b_flat.shape[0]
@@ -322,9 +399,9 @@ def solve(
         )
 
     # Per-system semantics (refresh policy, accounting, strategy
-    # transition) are shared with solve_sequence's scan body — ONE
-    # implementation, no drift.
-    result, info, w2, aw2, theta, drift2 = recycle_mod._one_recycled_solve(
+    # transition, recovery ladder) are shared with solve_sequence's scan
+    # body — ONE implementation, no drift.
+    x, info, w2, aw2, theta, drift2, rung = recycle_mod._one_recycled_solve(
         A,
         b,
         x0,
@@ -344,6 +421,9 @@ def solve(
         M=M,
         record_residuals=record_residuals,
         batch_axis=batch_axis,
+        recovery_rungs=spec.recovery_rungs,
+        recovery_shift=spec.recovery_shift,
+        stagnation_window=spec.stagnation_window,
     )
     new_state = RecycleState(
         W=w2,
@@ -353,7 +433,9 @@ def solve(
         systems_solved=state.systems_solved + 1,
         drift=drift2.astype(state.drift.dtype),
     )
-    return SolveResult(x=result.x, info=info, state=new_state)
+    return SolveResult(
+        x=x, info=info, state=new_state, report=_make_report(info, rung)
+    )
 
 
 solve_jit = jax.jit(
@@ -377,6 +459,7 @@ def _solve_sequence_spec(
     carry_x: bool = False,
     divergence_fallback: bool = True,
     batch_axis: Optional[str] = None,
+    x_prev0: Optional[jnp.ndarray] = None,
 ) -> SequenceSolveResult:
     if spec.method != "defcg":
         raise ValueError(
@@ -408,8 +491,13 @@ def _solve_sequence_spec(
         carry_x=carry_x,
         strategy=spec.strategy,
         drift0=state0.drift if state0 is not None else None,
-        divergence_fallback=divergence_fallback,
         batch_axis=batch_axis,
+        # divergence_fallback=False hard-disables recovery (the legacy
+        # switch); otherwise the spec's ladder depth governs.
+        recovery_rungs=(spec.recovery_rungs if divergence_fallback else 0),
+        recovery_shift=spec.recovery_shift,
+        stagnation_window=spec.stagnation_window,
+        x_prev0=x_prev0,
     )
     num_systems = jax.tree_util.tree_leaves(b_seq)[0].shape[0]
     solved0 = (
@@ -430,7 +518,131 @@ def _solve_sequence_spec(
         drift=seq.drift,
     )
     return SequenceSolveResult(
-        x=seq.x, info=seq.info, theta=seq.theta, state=state
+        x=seq.x,
+        info=seq.info,
+        theta=seq.theta,
+        state=state,
+        report=_make_report(seq.info, seq.rung),
+    )
+
+
+def _solve_sequence_chunked(
+    systems: Any,
+    b_seq: Pytree,
+    spec: SolveSpec,
+    state0: Optional[RecycleState],
+    *,
+    make_operator: Optional[Callable[[Any], Any]],
+    make_preconditioner: Optional[Callable[[Any], Any]],
+    carry_x: bool,
+    divergence_fallback: bool,
+    checkpoint,
+    checkpoint_every: int,
+    resume: bool,
+) -> SequenceSolveResult:
+    """Crash-resumable sequence driver: chunked scans + checkpoints.
+
+    Splits the N-system sequence into ``checkpoint_every``-sized chunks,
+    runs each chunk as one engine scan (at most TWO compilations: the
+    full-chunk program plus one trailing partial chunk), and saves the
+    full resume image — accumulated per-system outputs, the carried
+    :class:`RecycleState`, the warm-start carry, and ``next_index`` —
+    after every chunk via ``checkpoint.save(..., blocking=True)``.
+
+    With ``resume=True`` the newest restorable checkpoint is loaded and
+    the loop continues from its ``next_index``.  Chunk boundaries are
+    deterministic and the image is stored in full precision, so a
+    killed-and-resumed run reproduces the uninterrupted run's iterates
+    exactly.
+    """
+    num_systems = jax.tree_util.tree_leaves(b_seq)[0].shape[0]
+    b0 = jax.tree_util.tree_map(lambda l: l[0], b_seq)
+    b0_flat, unravel = pt.ravel_vector(b0)
+    n = b0_flat.shape[0]
+    dtype = b0_flat.dtype
+    if state0 is None:
+        state0 = RecycleState.zeros(spec.k, n, dtype)
+
+    # The resume image: everything needed to continue mid-sequence.
+    acc = {
+        "x": jnp.zeros((num_systems, n), dtype),
+        "theta": jnp.zeros((num_systems, spec.k), dtype),
+        "iterations": jnp.zeros((num_systems,), jnp.int32),
+        "converged": jnp.zeros((num_systems,), bool),
+        "residual_norm": jnp.zeros((num_systems,), dtype),
+        "matvecs": jnp.zeros((num_systems,), jnp.int32),
+        "breakdown": jnp.zeros((num_systems,), bool),
+        "status": jnp.zeros((num_systems,), jnp.int32),
+        "guard_fired": jnp.zeros((num_systems,), bool),
+        "rung": jnp.zeros((num_systems,), jnp.int32),
+        "state": state0,
+        "x_carry": jnp.zeros((n,), dtype),
+    }
+    start = 0
+    if resume:
+        restored = checkpoint.restore_latest(acc)
+        if restored is not None:
+            _, acc, extra = restored
+            start = int(extra["next_index"])
+
+    ravel_each = jax.vmap(pt.ravel)
+    while start < num_systems:
+        stop = min(start + checkpoint_every, num_systems)
+        sl = slice(start, stop)
+        res = _solve_sequence_spec(
+            jax.tree_util.tree_map(lambda l: l[sl], systems),
+            jax.tree_util.tree_map(lambda l: l[sl], b_seq),
+            spec,
+            acc["state"],
+            make_operator=make_operator,
+            make_preconditioner=make_preconditioner,
+            carry_x=carry_x,
+            divergence_fallback=divergence_fallback,
+            x_prev0=acc["x_carry"] if carry_x else None,
+        )
+        x_flat = ravel_each(res.x)
+        acc = dict(
+            acc,
+            x=acc["x"].at[sl].set(x_flat),
+            iterations=acc["iterations"].at[sl].set(res.info.iterations),
+            converged=acc["converged"].at[sl].set(res.info.converged),
+            residual_norm=acc["residual_norm"]
+            .at[sl]
+            .set(res.info.residual_norm.astype(dtype)),
+            matvecs=acc["matvecs"].at[sl].set(res.info.matvecs),
+            breakdown=acc["breakdown"]
+            .at[sl]
+            .set(jnp.asarray(res.info.breakdown, bool)),
+            status=acc["status"].at[sl].set(jnp.asarray(res.info.status)),
+            guard_fired=acc["guard_fired"]
+            .at[sl]
+            .set(jnp.asarray(res.info.guard_fired, bool)),
+            rung=acc["rung"].at[sl].set(res.report.rung),
+            state=res.state,
+            x_carry=x_flat[-1],
+        )
+        if res.theta is not None:
+            acc["theta"] = acc["theta"].at[sl].set(res.theta)
+        checkpoint.save(
+            acc, step=stop, extra={"next_index": stop}, blocking=True
+        )
+        start = stop
+
+    info = SolveInfo(
+        iterations=acc["iterations"],
+        converged=acc["converged"],
+        residual_norm=acc["residual_norm"],
+        matvecs=acc["matvecs"],
+        breakdown=acc["breakdown"],
+        status=acc["status"],
+        guard_fired=acc["guard_fired"],
+    )
+    return SequenceSolveResult(
+        x=jax.vmap(unravel)(acc["x"]),
+        info=info,
+        theta=acc["theta"] if spec.ell > 0 else None,
+        state=acc["state"],
+        report=_make_report(info, acc["rung"]),
     )
 
 
@@ -444,6 +656,9 @@ def solve_sequence(
     make_preconditioner: Optional[Callable[[Any], Any]] = None,
     carry_x: bool = False,
     divergence_fallback: bool = True,
+    checkpoint=None,
+    checkpoint_every: int = 0,
+    resume: bool = False,
     **legacy,
 ):
     """Solve a sequence of related SPD systems on-device, spec-driven.
@@ -456,6 +671,14 @@ def solve_sequence(
     per-system operator to its ``M`` apply, so the whole scan runs
     Nyström/Jacobi-preconditioned def-CG.
 
+    Crash resumability: pass ``checkpoint`` (a
+    :class:`repro.checkpoint.CheckpointManager`) and ``checkpoint_every``
+    (systems per chunk) to run the sequence as deterministic chunked
+    scans, saving the full resume image after each chunk.  With
+    ``resume=True`` the run continues from the newest restorable
+    checkpoint; a killed-and-resumed run reproduces the uninterrupted
+    run's iterates exactly.
+
     Legacy calls — ``solve_sequence(systems, b_seq, W0, AW0, k=…,
     ell=…, …)`` — are forwarded to the engine unchanged (same
     ``SequenceResult`` return) with a ``DeprecationWarning``.
@@ -465,6 +688,29 @@ def solve_sequence(
             raise TypeError(
                 f"unexpected keyword arguments with a SolveSpec: "
                 f"{sorted(legacy)} — fold them into the spec"
+            )
+        if checkpoint is not None:
+            if checkpoint_every < 1:
+                raise ValueError(
+                    "checkpoint= needs checkpoint_every >= 1 (systems per "
+                    f"chunk), got {checkpoint_every}"
+                )
+            return _solve_sequence_chunked(
+                systems,
+                b_seq,
+                SolveSpec() if spec is None else spec,
+                state0,
+                make_operator=make_operator,
+                make_preconditioner=make_preconditioner,
+                carry_x=carry_x,
+                divergence_fallback=divergence_fallback,
+                checkpoint=checkpoint,
+                checkpoint_every=checkpoint_every,
+                resume=resume,
+            )
+        if resume or checkpoint_every:
+            raise ValueError(
+                "resume=/checkpoint_every= need checkpoint=<CheckpointManager>"
             )
         return _solve_sequence_spec(
             systems,
@@ -478,6 +724,11 @@ def solve_sequence(
         )
     # Legacy signature: (systems, b_seq, W0, AW0, *, k, ell, ...) — W0/AW0
     # may arrive positionally (in the spec/state0 slots) or by keyword.
+    if checkpoint is not None or resume or checkpoint_every:
+        raise ValueError(
+            "checkpoint=/checkpoint_every=/resume= require the SolveSpec "
+            "signature: solve_sequence(systems, b, SolveSpec(...), state0)"
+        )
     warnings.warn(
         "solve_sequence(systems, b, W0, AW0, k=..., ell=...) is deprecated; "
         "use solve_sequence(systems, b, SolveSpec(k=..., ell=...), state0)",
@@ -566,14 +817,14 @@ def solve_batch(
                 carry_x=carry_x,
                 batch_axis=_TENANT_AXIS,
             )
-            return res.x, res.info, res.state
+            return res.x, res.info, res.state, res.report
 
         if state is None:
             state = _batched_zero_state(b_batch, spec, axes=2)
-        x, info, state_out = jax.vmap(one_seq, axis_name=_TENANT_AXIS)(
-            systems, b_batch, state
-        )
-        return BatchSolveResult(x=x, info=info, state=state_out)
+        x, info, state_out, report = jax.vmap(
+            one_seq, axis_name=_TENANT_AXIS
+        )(systems, b_batch, state)
+        return BatchSolveResult(x=x, info=info, state=state_out, report=report)
 
     if spec.method == "cg":
 
@@ -585,13 +836,13 @@ def solve_batch(
                 else None
             )
             res = solve(A, b_i, spec, None, M=M)
-            return res.x, res.info
+            return res.x, res.info, res.report
 
         # Plain CG neither consumes nor updates recycle state — a
         # caller-supplied batched state passes through untouched (same
         # contract as solve()).
-        x, info = jax.vmap(one_cg)(systems, b_batch)
-        return BatchSolveResult(x=x, info=info, state=state)
+        x, info, report = jax.vmap(one_cg)(systems, b_batch)
+        return BatchSolveResult(x=x, info=info, state=state, report=report)
 
     def one(sys_i, b_i, st_i):
         A = make_op(sys_i)
@@ -604,14 +855,14 @@ def solve_batch(
         # across the tenant axis, so the batch stops paying operator
         # applications the moment its LAST tenant converges.
         res = solve(A, b_i, spec, st_i, M=M, batch_axis=_TENANT_AXIS)
-        return res.x, res.info, res.state
+        return res.x, res.info, res.state, res.report
 
     if state is None:
         state = _batched_zero_state(b_batch, spec, axes=1)
-    x, info, state_out = jax.vmap(one, axis_name=_TENANT_AXIS)(
+    x, info, state_out, report = jax.vmap(one, axis_name=_TENANT_AXIS)(
         systems, b_batch, state
     )
-    return BatchSolveResult(x=x, info=info, state=state_out)
+    return BatchSolveResult(x=x, info=info, state=state_out, report=report)
 
 
 def _batched_zero_state(

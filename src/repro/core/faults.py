@@ -1,0 +1,160 @@
+"""Fault injection for the solve runtime — proof the ladder works.
+
+The robustness layer (breakdown detection in :mod:`repro.core.solvers`,
+the recovery ladder in :mod:`repro.core.recycle`, crash-resumable
+sequences in :mod:`repro.core.api`) is only trustworthy if it is
+exercised against *actual* faults.  This module supplies the chaos:
+
+* :class:`FaultInjectingOperator` — a registered-pytree wrapper around
+  any operator that corrupts its matvec output on demand:
+
+  - ``poison`` (traced): an additive scalar folded into every matvec
+    result.  ``nan``/``inf`` model hard numerical corruption (a bad
+    reduction, a poisoned kernel tile); a small finite value models a
+    bounded perturbation (lossy interconnect, non-deterministic
+    accumulation).  Because it is a *traced leaf*, a per-system
+    ``(N,)`` poison array scans through the sequence engine — "system i
+    of the trace is broken" is just ``poison.at[i].set(nan)`` — and a
+    per-tenant array vmaps through :func:`repro.core.solve_batch`.
+  - ``at_matvec`` (static): corrupt exactly the ``t``-th *executed*
+    matvec, counted on the host through ``io_callback`` — "the solve
+    breaks mid-iteration at step t".  Host-counted, so keep it out of
+    ``vmap``/multi-device code; it exists for single-solve chaos tests.
+
+* :func:`truncate_latest_checkpoint` — damage the newest checkpoint on
+  disk the way a crash mid-write would (manifest present, arrays
+  unreadable), to prove ``restore_latest`` falls back and reports the
+  skip.
+
+Nothing here is imported by the solver hot path; it is test/benchmark
+instrumentation that happens to live next to the code it attacks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import io_callback
+
+from repro.core import pytree as pt
+
+Pytree = Any
+
+
+class _HostCounter:
+    """Mutable host-side executed-matvec counter.
+
+    Lives in the operator's pytree *aux data*, so it must be hashable
+    with identity semantics (jit retraces when the counter object —
+    not its value — changes).
+    """
+
+    __slots__ = ("count",)
+
+    def __init__(self):
+        self.count = 0
+
+    def tick(self) -> np.int32:
+        self.count += 1
+        return np.int32(self.count)
+
+    def reset(self):
+        self.count = 0
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class FaultInjectingOperator:
+    """Wrap any operator ``A`` and corrupt selected matvec outputs.
+
+    Attributes:
+      base: the wrapped operator (any callable pytree; its traced leaves
+        remain traced through this wrapper).
+      poison: traced additive scalar applied to EVERY matvec result.
+        ``0.0`` is a bit-exact no-op on the output values (``out + 0``),
+        ``nan``/``inf`` is hard corruption, small finite values are
+        bounded perturbations.  May be a per-system/per-tenant array
+        upstream, sliced to a scalar by scan/vmap by the time it
+        reaches this operator.
+      at_matvec: 0-based index of the single executed matvec to poison
+        with NaN, counted host-side across ALL applications of this
+        operator instance (including basis refreshes).  ``None``
+        disables the counter entirely — the operator stays pure and
+        vmap/scan-safe.
+      counter: the host counter backing ``at_matvec`` (auto-created).
+        Call :meth:`reset` between solves to re-arm.
+    """
+
+    base: Any
+    poison: jnp.ndarray = 0.0
+    at_matvec: Optional[int] = None
+    counter: Optional[_HostCounter] = None
+
+    def __post_init__(self):
+        if self.at_matvec is not None and self.counter is None:
+            object.__setattr__(self, "counter", _HostCounter())
+
+    def reset(self):
+        """Re-arm the ``at_matvec`` trigger (no-op without one)."""
+        if self.counter is not None:
+            self.counter.reset()
+
+    @property
+    def executed_matvecs(self) -> int:
+        """Host-observed matvec count (0 without an ``at_matvec`` trigger)."""
+        return self.counter.count if self.counter is not None else 0
+
+    def __call__(self, v: Pytree) -> Pytree:
+        out = self.base(v)
+        flat, unravel = pt.ravel_vector(out)
+        bad = jnp.asarray(self.poison, flat.dtype)
+        if self.at_matvec is not None:
+            t = io_callback(
+                self.counter.tick,
+                jax.ShapeDtypeStruct((), np.int32),
+                ordered=False,
+            )
+            hit = (t - 1) == self.at_matvec
+            bad = bad + jnp.where(hit, jnp.asarray(jnp.nan, flat.dtype), 0)
+        return unravel(flat + bad)
+
+    # -- pytree protocol ---------------------------------------------------
+    def tree_flatten(self):
+        return (self.base, self.poison), (self.at_matvec, self.counter)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        base, poison = children
+        at_matvec, counter = aux
+        return cls(base, poison, at_matvec, counter)
+
+
+def truncate_latest_checkpoint(directory: str) -> Optional[int]:
+    """Damage the newest checkpoint like a crash mid-write would.
+
+    Replaces its ``arrays.npz`` with garbage bytes while leaving the
+    manifest intact — the checkpoint directory looks committed but its
+    payload is unreadable, exactly the state a host death between the
+    array write and the atomic rename cannot produce but a torn disk
+    can.  Returns the damaged step number, or ``None`` if the directory
+    holds no checkpoints.
+    """
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            try:
+                steps.append(int(name.split("_")[1]))
+            except ValueError:
+                continue
+    if not steps:
+        return None
+    step = max(steps)
+    payload = os.path.join(directory, f"step_{step:08d}", "arrays.npz")
+    with open(payload, "wb") as f:
+        f.write(b"not an npz: torn write")
+    return step

@@ -282,6 +282,10 @@ def _apply_basis_flat(A, unravel, w_flat: jnp.ndarray) -> jnp.ndarray:
     return pt.ravel_basis(ops_mod.apply_to_basis(A, basis))
 
 
+# Highest rung the recovery ladder can climb (see ``_one_recycled_solve``).
+MAX_RECOVERY_RUNGS = 3
+
+
 def _one_recycled_solve(
     A,
     b: Pytree,
@@ -303,6 +307,9 @@ def _one_recycled_solve(
     M=None,
     record_residuals: bool = False,
     batch_axis: Optional[str] = None,
+    recovery_rungs: int = 0,
+    recovery_shift: float = 1e-6,
+    stagnation_window: int = 0,
 ):
     """ONE system of the recycled def-CG step, on flat state.
 
@@ -319,11 +326,45 @@ def _one_recycled_solve(
       ``(P, AP, α, β, stored)`` handoff from the solver's scan phase —
       and emits the next ``(W, AW, θ, drift)``.
 
-    Returns ``(result, info, w_next, aw_next, theta, drift_next)``;
+    ``recovery_rungs > 0`` arms the escalating recovery ladder (the
+    generalization of the old one-shot ``divergence_fallback``).  When
+    the attempt ends broken (``info.breakdown``) or unconverged with a
+    carried basis, a ``lax.while_loop`` climbs up to
+    :data:`MAX_RECOVERY_RUNGS` re-solve rungs:
+
+    1. **refresh-AW-and-redo** — keep ``W``, recompute ``AW = A·W``
+       exactly (k matvecs, charged) and re-solve: repairs stale/poisoned
+       basis *products* and transient matvec faults without discarding
+       the subspace;
+    2. **drop the basis** — re-solve with a zeroed ``W`` (the
+       cold-bootstrap path: exact no-op deflation plus recording, so the
+       extraction re-seeds the sequence);
+    3. **escalated plain CG** — zero basis, preconditioner disabled, and
+       the operator shifted to ``A + σI`` (σ = ``recovery_shift``): the
+       last resort against a (numerically) indefinite or singular
+       operator, trading a σ-sized bias for a finite answer.
+
+    The loop traces ONE extra solver instance regardless of rung count
+    (rung identity is a traced index: the shift is ``σ·𝟙[rung = 3]`` and
+    the preconditioner is identity-gated), and on a clean solve it runs
+    zero iterations — the clean path's iterates and matvec totals are
+    untouched.  Every executed attempt's matvecs are charged to the
+    reported total; the adopted solution is whichever attempt holds the
+    smallest (finite, non-broken) residual, while the basis always comes
+    from the last executed rung — a freshly re-seeded space beats
+    carrying poison forward.  Rung 3 only fires on an actual breakdown
+    (a merely maxiter-bound system is not re-solved against a shifted
+    operator), and a basis-less system that fails *without* breakdown
+    never enters the ladder (re-running the identical solve cannot
+    help).
+
+    Returns ``(x, info, w_next, aw_next, theta, drift_next, rung)``;
     ``theta`` is ``None`` when ``ell == 0`` (nothing recorded — callers
     carry their previous Ritz values, and the drift carry passes through
-    unchanged).
+    unchanged), and ``rung`` is the int32 highest recovery rung executed
+    (0 = clean / ladder disarmed).
     """
+    m_flat = _flat_operator(M, unravel) if M is not None else None
     aw_used, refresh_matvecs, exact_aw, stale_guard = strategy.prepare(
         lambda ww: _apply_basis_flat(A, unravel, ww),
         w,
@@ -351,6 +392,7 @@ def _one_recycled_solve(
         M=M,
         batch_axis=batch_axis,
         stale_guard=stale_guard,
+        stagnation_window=stagnation_window,
     )
     if result.recycle is not None and result.recycle.aw_used is not None:
         # The in-solve drift guard may have replaced the stale AW with a
@@ -370,11 +412,195 @@ def _one_recycled_solve(
             result.recycle,
             k=k,
             select=select,
-            m_apply=(_flat_operator(M, unravel) if M is not None else None),
+            m_apply=m_flat,
         )
     else:
         w_next, aw_next, theta, drift_next = w, aw_used, None, drift
-    return result, info, w_next, aw_next, theta, drift_next
+
+    rung0 = jnp.int32(0)
+    if recovery_rungs <= 0:
+        return (
+            result.x, info, w_next, aw_next, theta, drift_next, rung0,
+        )
+
+    rungs = min(int(recovery_rungs), MAX_RECOVERY_RUNGS)
+    had_basis = jnp.any(w != 0)
+    zero_dtype = w.dtype
+
+    def _eligible(i, info_c):
+        """Per-lane: does rung ``i`` apply to this (still-bad) solve?"""
+        bad_c = info_c.breakdown | jnp.logical_not(info_c.converged)
+        return (
+            bad_c
+            & (had_basis | info_c.breakdown)
+            & ((i < MAX_RECOVERY_RUNGS) | info_c.breakdown)
+        )
+
+    def ladder_cond(st):
+        i, _, info_c, *_ = st
+        elig = _eligible(i, info_c)
+        if batch_axis is not None:
+            # Under vmap a batched predicate would kill the loop — the
+            # cross-lane any() is unbatched, and lanes mask per-slot
+            # adoption in the body (a broken tenant is retired into its
+            # own failure status without dragging the healthy lanes).
+            elig = jax.lax.psum(elig.astype(jnp.int32), batch_axis) > 0
+        return (i <= rungs) & elig
+
+    def ladder_body(st):
+        i, x_c, info_c, w_c, aw_c, th_c, d_c, rung_c = st
+        is1 = i == jnp.int32(1)
+        # Rung identity is traced, so every rung shares this ONE solver
+        # instance: rung 1 keeps W with a freshly refreshed AW; rungs 2–3
+        # zero the basis; rung 3 additionally shifts the operator and
+        # gates the preconditioner to identity.
+        w_att = jnp.where(is1, w, jnp.zeros_like(w))
+        refresh_pred = is1 & had_basis
+        if batch_axis is not None:
+            refresh_pred = (
+                jax.lax.psum(refresh_pred.astype(jnp.int32), batch_axis) > 0
+            )
+        aw_att = jax.lax.cond(
+            refresh_pred,
+            lambda _: _apply_basis_flat(A, unravel, w),
+            lambda _: jnp.zeros_like(aw_carry),
+            None,
+        )
+        aw_att = jnp.where(is1, aw_att, jnp.zeros_like(aw_att))
+        refresh_charge = jnp.where(is1 & had_basis, k, 0).astype(jnp.int32)
+
+        sigma = jnp.where(
+            i >= MAX_RECOVERY_RUNGS, recovery_shift, 0.0
+        ).astype(zero_dtype)
+
+        def A_rec(v):
+            return jax.tree_util.tree_map(
+                lambda a_, v_: a_ + sigma * v_, A(v), v
+            )
+
+        M_rec = None
+        if M is not None:
+            use_m = i < MAX_RECOVERY_RUNGS
+
+            def M_rec(v):  # noqa: F811 — identity-gated preconditioner
+                return jax.tree_util.tree_map(
+                    lambda m_, v_: jnp.where(use_m, m_, v_), M(v), v
+                )
+
+        res = defcg(
+            A_rec,
+            b,
+            x0,
+            W=w_att,
+            AW=aw_att,
+            ell=ell,
+            tol=tol,
+            atol=atol,
+            maxiter=maxiter,
+            record_residuals=record_residuals,
+            waw_jitter=waw_jitter,
+            exact_aw=True,
+            flat_recycle=True,
+            M=M_rec,
+            batch_axis=batch_axis,
+            stale_guard=None,
+            stagnation_window=stagnation_window,
+        )
+        i2 = res.info
+        if ell > 0:
+            w2, aw2, th2, d2 = strategy.transition(
+                w_att,
+                aw_att,
+                res.recycle,
+                k=k,
+                select=select,
+                m_apply=m_flat,
+            )
+        else:
+            w2, aw2, th2, d2 = w_att, aw_att, None, d_c
+
+        elig = _eligible(i, info_c)
+        # Keep whichever attempt holds the better residual (a broken or
+        # non-finite incumbent loses naturally), but always carry the
+        # rung's freshly extracted basis and the honest matvec total.
+        warm_ok = jnp.isfinite(info_c.residual_norm) & (
+            ~info_c.breakdown
+        )
+        take_x = elig & (
+            (~warm_ok) | (i2.residual_norm < info_c.residual_norm)
+        )
+        selx = lambda a, b_: jnp.where(take_x, a, b_)  # noqa: E731
+        sel = lambda a, b_: jnp.where(elig, a, b_)  # noqa: E731
+        x_n = selx(pt.ravel(res.x), x_c)
+        info_n = SolveInfo(
+            iterations=selx(i2.iterations, info_c.iterations),
+            converged=selx(i2.converged, info_c.converged),
+            residual_norm=selx(i2.residual_norm, info_c.residual_norm),
+            matvecs=sel(
+                i2.matvecs + info_c.matvecs + refresh_charge,
+                info_c.matvecs,
+            ),
+            residual_norms=(
+                None
+                if i2.residual_norms is None
+                else selx(i2.residual_norms, info_c.residual_norms)
+            ),
+            breakdown=selx(i2.breakdown, info_c.breakdown),
+            status=selx(i2.status, info_c.status),
+            guard_fired=info_c.guard_fired,
+        )
+        th_n = None if th2 is None else sel(th2, th_c)
+        return (
+            i + 1,
+            x_n,
+            info_n,
+            sel(w2, w_c),
+            sel(aw2, aw_c),
+            th_n,
+            sel(d2, d_c),
+            jnp.where(elig, i, rung_c).astype(jnp.int32),
+        )
+
+    st = (
+        jnp.int32(1),
+        pt.ravel(result.x),
+        info,
+        w_next,
+        aw_next,
+        theta,
+        drift_next,
+        rung0,
+    )
+    _, x_fin, info_fin, w_fin, aw_fin, th_fin, d_fin, rung_fin = (
+        jax.lax.while_loop(ladder_cond, ladder_body, st)
+    )
+    # Terminal retirement: a solve that is STILL broken after the whole
+    # ladder (a persistently-corrupted operator) must neither return
+    # non-finite coordinates nor hand a poisoned subspace to the next
+    # system/tenant.  The solution falls back to the finite warm start
+    # (or zeros) and the carried state is zeroed — the sequence
+    # re-bootstraps cold from the next system on.  Status/residual stay
+    # honest: the report still says BREAKDOWN_*.
+    x_safe = (
+        jnp.zeros_like(x_fin)
+        if x0 is None
+        else pt.ravel(x0).astype(x_fin.dtype)
+    )
+    x_safe = jnp.where(jnp.isfinite(x_safe), x_safe, 0.0)
+    x_fin = jnp.where(jnp.all(jnp.isfinite(x_fin)), x_fin, x_safe)
+    retire = (
+        info_fin.breakdown
+        | ~jnp.all(jnp.isfinite(w_fin))
+        | ~jnp.all(jnp.isfinite(aw_fin))
+    )
+    w_fin = jnp.where(retire, 0.0, w_fin)
+    aw_fin = jnp.where(retire, 0.0, aw_fin)
+    if th_fin is not None:
+        th_fin = jnp.where(retire, 0.0, th_fin)
+    d_fin = jnp.where(retire, jnp.zeros_like(d_fin), d_fin)
+    return (
+        unravel(x_fin), info_fin, w_fin, aw_fin, th_fin, d_fin, rung_fin,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -391,6 +617,7 @@ class SequenceResult(NamedTuple):
     W: jnp.ndarray  # final recycled basis, flat (k, n)
     AW: jnp.ndarray  # its A-products under the last refresh
     drift: Optional[jnp.ndarray] = None  # final strategy drift carry
+    rung: Optional[jnp.ndarray] = None  # (num_systems,) recovery rung taken
 
 
 def solve_sequence(
@@ -414,6 +641,10 @@ def solve_sequence(
     drift0: Optional[jnp.ndarray] = None,
     divergence_fallback: bool = True,
     batch_axis: Optional[str] = None,
+    recovery_rungs: Optional[int] = None,
+    recovery_shift: float = 1e-6,
+    stagnation_window: int = 0,
+    x_prev0: Optional[jnp.ndarray] = None,
 ) -> SequenceResult:
     """Solve a whole sequence of related SPD systems on-device.
 
@@ -462,26 +693,32 @@ def solve_sequence(
         the scan carry — still zero host syncs.
       drift0: initial drift carry (a previous ``SequenceResult.drift`` /
         ``RecycleState.drift``; ``None`` → 0).
-      divergence_fallback: guard each system of the scan against a
-        poisoned deflation basis.  A stale/ill-conditioned basis can
-        break the conjugacy recurrence outright (``info.breakdown``) or
-        stall it past ``maxiter``; the host-driven
-        :class:`RecycleManager` re-solves clean in that case, but the
-        device path previously had NO fallback — one bad system silently
-        returned garbage and the poisoned basis propagated down the
-        scan.  With the guard, a ``lax.cond`` re-solves that system with
-        a zeroed basis (plain CG + recording — the cold-bootstrap path),
-        the failed attempt's matvecs are folded into the reported total,
-        and the sequence continues from the freshly extracted space.
-        Runtime cost is paid only when taken (the cond is a real branch
-        in the scan body); compile cost is a second solver instance.
+      divergence_fallback: legacy switch for the per-system recovery
+        ladder: ``True`` (default) arms the full ladder
+        (``recovery_rungs=3``), ``False`` disarms it entirely.
+        Superseded by ``recovery_rungs`` (which wins when given).
       batch_axis: vmap axis name for the all-tenants-converged matvec
         gate (see :func:`repro.core.solvers.defcg`); ``solve_batch``
         sets it.
+      recovery_rungs: explicit rung count for the escalating recovery
+        ladder each system of the scan runs on breakdown/non-convergence
+        — see :func:`_one_recycled_solve` for the rung semantics
+        (refresh-AW-and-redo → drop basis → shifted plain CG).  A failed
+        attempt's matvecs are folded into the reported totals and the
+        sequence continues from the rung's freshly extracted basis.
+        ``None`` defers to ``divergence_fallback``.
+      recovery_shift: σ of the rung-3 ``A + σI`` shift.
+      stagnation_window: per-solve stalled-residual detector window
+        (see :func:`repro.core.solvers.defcg`); 0 disables.
+      x_prev0: initial flat ``(n,)`` warm-start carry for ``carry_x``
+        mode — lets a chunked/resumed driver continue a sequence exactly
+        where a previous call stopped (``None`` → zeros, the cold
+        start).
 
     Returns:
       :class:`SequenceResult` with per-system solutions/diagnostics and
-      the final basis, ready to seed the next call.
+      the final basis, ready to seed the next call.  Its ``rung`` field
+      records the per-system recovery rung taken (0 = clean).
     """
     if refresh_aw not in ("exact", "stale"):
         raise ValueError(f"unknown refresh_aw={refresh_aw!r}")
@@ -504,10 +741,14 @@ def solve_sequence(
         if (AW0 is None or W0 is None)
         else AW0.astype(dtype)
     )
-    x_init = jnp.zeros((n,), dtype)
+    x_init = (
+        jnp.zeros((n,), dtype) if x_prev0 is None else x_prev0.astype(dtype)
+    )
     drift_init = (
         jnp.zeros((), dtype) if drift0 is None else drift0.astype(dtype)
     )
+    if recovery_rungs is None:
+        recovery_rungs = MAX_RECOVERY_RUNGS if divergence_fallback else 0
 
     def body(carry, xs):
         w, aw, drift, x_prev = carry
@@ -519,13 +760,16 @@ def solve_sequence(
             if make_preconditioner is not None
             else None
         )
-        # Per-system semantics (refresh, accounting, extraction) live in
-        # ONE place, shared with the single-system front door.
-        one = functools.partial(
-            _one_recycled_solve,
+        # Per-system semantics (refresh, accounting, extraction, and the
+        # recovery ladder) live in ONE place, shared with the
+        # single-system front door.
+        x_out, info, w2, aw2, theta, drift2, rung = _one_recycled_solve(
             A,
             b,
             x0,
+            w,
+            aw,
+            drift,
             unravel=unravel,
             k=k,
             ell=ell,
@@ -538,95 +782,21 @@ def solve_sequence(
             strategy=strategy,
             M=M,
             batch_axis=batch_axis,
+            recovery_rungs=recovery_rungs,
+            recovery_shift=recovery_shift,
+            stagnation_window=stagnation_window,
         )
-        result, info, w2, aw2, theta, drift2 = one(w, aw, drift)
-
-        if divergence_fallback:
-            # Residual-increase guard: a poisoned basis (breakdown, or a
-            # stall that never met tolerance) must not return garbage or
-            # hand the poison to the next system.  Re-solve THIS system
-            # with a zeroed basis — the cold-bootstrap path: exact no-op
-            # deflation plus recording, so the extraction re-seeds the
-            # sequence — charging the failed attempt's matvecs.
-            had_basis = jnp.any(w != 0)
-            bad = had_basis & (
-                info.breakdown | jnp.logical_not(info.converged)
-            )
-            if batch_axis is None:
-                any_bad = bad
-            else:
-                # Under solve_batch's vmap a batched predicate would
-                # lower the cond to a select — every tenant would pay the
-                # full second solve unconditionally.  Reduce across the
-                # tenant axis (unbatched → the cond survives batching)
-                # and mask the outcome per lane below.
-                any_bad = jax.lax.psum(bad.astype(jnp.int32), batch_axis) > 0
-
-            keep_out = (result.x, info, w2, aw2, theta, drift2)
-
-            def fallback(_):
-                zw = jnp.zeros_like(w)
-                r2, i2, w2b, aw2b, th2, d2 = one(
-                    zw, jnp.zeros_like(aw), jnp.zeros_like(drift)
-                )
-                # Both attempts were paid for — report them both.
-                i2 = i2._replace(matvecs=i2.matvecs + info.matvecs)
-                # `bad` without breakdown can also mean "genuinely hard
-                # system, maxiter bound" — there the warm iterate may be
-                # the better answer.  Keep whichever residual is smaller
-                # (a broken warm attempt has a huge/NaN norm and loses
-                # naturally), but always carry the fallback's freshly
-                # re-seeded basis and its honest matvec total.
-                warm_ok = jnp.isfinite(info.residual_norm) & (
-                    ~info.breakdown
-                )
-                cold_wins = (~warm_ok) | (
-                    i2.residual_norm < info.residual_norm
-                )
-                take = cold_wins & bad
-                x_sel = jax.tree_util.tree_map(
-                    lambda a, b_: jnp.where(take, a, b_), r2.x, result.x
-                )
-                i_sel = jax.tree_util.tree_map(
-                    lambda a, b_: jnp.where(bad, a, b_), i2, info
-                )
-                i_sel = i_sel._replace(
-                    residual_norm=jnp.where(
-                        take, i2.residual_norm, info.residual_norm
-                    ),
-                    iterations=jnp.where(
-                        take, i2.iterations, info.iterations
-                    ),
-                )
-                sel = lambda a, b_: jnp.where(bad, a, b_)  # noqa: E731
-                return (
-                    x_sel,
-                    i_sel,
-                    sel(w2b, w2),
-                    sel(aw2b, aw2),
-                    (
-                        None
-                        if th2 is None
-                        else sel(th2, theta)
-                    ),
-                    sel(d2, drift2),
-                )
-
-            x_out, info, w2, aw2, theta, drift2 = jax.lax.cond(
-                any_bad, fallback, lambda _: keep_out, None
-            )
-        else:
-            x_out = result.x
-
         x_flat = pt.ravel(x_out)
-        return (w2, aw2, drift2, x_flat), (x_out, info, theta)
+        return (w2, aw2, drift2, x_flat), (x_out, info, theta, rung)
 
-    (w_fin, aw_fin, drift_fin, _), (xs_out, infos, thetas) = jax.lax.scan(
-        body, (w_init, aw_init, drift_init, x_init), (systems, b_seq)
+    (w_fin, aw_fin, drift_fin, _), (xs_out, infos, thetas, rungs) = (
+        jax.lax.scan(
+            body, (w_init, aw_init, drift_init, x_init), (systems, b_seq)
+        )
     )
     return SequenceResult(
         x=xs_out, info=infos, theta=thetas, W=w_fin, AW=aw_fin,
-        drift=drift_fin,
+        drift=drift_fin, rung=rungs,
     )
 
 
@@ -647,6 +817,9 @@ solve_sequence_jit = jax.jit(
         "strategy",
         "divergence_fallback",
         "batch_axis",
+        "recovery_rungs",
+        "recovery_shift",
+        "stagnation_window",
     ),
 )
 

@@ -65,6 +65,76 @@ DEFAULT_WAW_JITTER = 1e-12
 # guard and every strategy-layer comparison (``repro.core.strategies``).
 DRIFT_NOISE_FLOOR_EPS = 500.0
 
+# Stagnation test: a new best residual must beat the previous best by at
+# least this factor to count as progress.  CG on a hard-but-healthy system
+# keeps shaving the residual (1% over `stagnation_window` iterations is a
+# very low bar); a solve that is looping on a poisoned recurrence does not.
+_STAGNATION_RTOL = 0.99
+
+
+class SolveStatus:
+    """Enumerated terminal status of an iterative solve.
+
+    Plain int32 codes (not a Python enum) so they live inside jitted loop
+    state and ``jnp.where`` selections.  ``0``/``1`` are the healthy exits;
+    anything ``>= BREAKDOWN_NONFINITE`` means the iteration was cut short
+    by a detected numerical failure and the recovery ladder
+    (``repro.core.recycle``) may have re-solved.
+    """
+
+    CONVERGED = 0  # ‖r‖ ≤ max(tol·‖b‖, atol)
+    MAXITER = 1  # iteration budget exhausted, no breakdown detected
+    BREAKDOWN_NONFINITE = 2  # NaN/Inf in pᵀAp or ‖r‖ (poisoned matvec/basis)
+    BREAKDOWN_INDEFINITE = 3  # pᵀAp ≤ 0: operator not SPD along p
+    STAGNATED = 4  # residual stalled for `stagnation_window` iters, or diverged
+
+    _NAMES = {
+        0: "CONVERGED",
+        1: "MAXITER",
+        2: "BREAKDOWN_NONFINITE",
+        3: "BREAKDOWN_INDEFINITE",
+        4: "STAGNATED",
+    }
+
+    @classmethod
+    def describe(cls, code) -> str:
+        """Host-side pretty-printer for a (concrete) status code."""
+        return cls._NAMES.get(int(code), f"UNKNOWN({int(code)})")
+
+
+def _classify_breakdown(d, rnorm, diverged_at):
+    """Fold breakdown detection into the pᵀAp reduction already computed.
+
+    Returns ``(bad, code)``: ``bad`` flags this iteration as broken and
+    ``code`` is the int32 :class:`SolveStatus` cause (0 when healthy).
+    Explosive residual growth (past the ``diverged_at`` ceiling) is
+    classed as STAGNATED — "stopped converging" covers both stalling and
+    running away; the non-finite/indefinite codes are reserved for
+    detections at the reduction itself.
+    """
+    nonfinite = ~jnp.isfinite(d)
+    indefinite = (~nonfinite) & (d <= 0.0)
+    diverging = rnorm > diverged_at
+    bad = nonfinite | indefinite | diverging
+    code = jnp.where(
+        nonfinite,
+        SolveStatus.BREAKDOWN_NONFINITE,
+        jnp.where(
+            indefinite,
+            SolveStatus.BREAKDOWN_INDEFINITE,
+            SolveStatus.STAGNATED,
+        ),
+    )
+    return bad, jnp.where(bad, code, 0).astype(jnp.int32)
+
+
+def _exit_status(converged, fail):
+    return jnp.where(
+        converged,
+        SolveStatus.CONVERGED,
+        jnp.where(fail > 0, fail, SolveStatus.MAXITER),
+    ).astype(jnp.int32)
+
 
 class SolveInfo(NamedTuple):
     """Diagnostics of an iterative solve (all traced values)."""
@@ -74,7 +144,9 @@ class SolveInfo(NamedTuple):
     residual_norm: jax.Array  # final ‖r‖
     matvecs: jax.Array  # total operator applications
     residual_norms: Optional[jax.Array] = None  # (maxiter+1,) trace or None
-    breakdown: jax.Array | bool = False  # pᵀAp lost positivity
+    breakdown: jax.Array | bool = False  # any in-loop breakdown detected
+    status: jax.Array | int = 0  # int32 SolveStatus code of the terminal exit
+    guard_fired: jax.Array | bool = False  # in-solve stale_guard refreshed AW
 
 
 class RecycleData(NamedTuple):
@@ -137,6 +209,7 @@ def cg(
     maxiter: int = 1000,
     M: Optional[Callable[[Pytree], Pytree]] = None,
     record_residuals: bool = False,
+    stagnation_window: int = 0,
 ) -> CGResult:
     """(Preconditioned) conjugate gradients for SPD ``A``.
 
@@ -147,6 +220,13 @@ def cg(
     iteration, not twice), and without a preconditioner the recurrence
     scalar is the ``‖r‖²`` reduction the fused update pass already emits —
     plain CG costs exactly one reduction per iteration beyond ``pᵀAp``.
+
+    Per-iteration breakdown detection rides those same reductions: a
+    non-finite or non-positive ``pᵀAp`` and a runaway ``‖r‖`` stop the
+    loop with a typed cause in ``info.status`` (:class:`SolveStatus`).
+    ``stagnation_window > 0`` additionally declares STAGNATED when the
+    best residual fails to improve by 1% over that many consecutive
+    iterations (0 — the default — adds no state and no checks).
     """
     b_flat, unravel = pt.ravel_vector(b)
     x_flat = jnp.zeros_like(b_flat) if x0 is None else pt.ravel(x0)
@@ -169,15 +249,19 @@ def cg(
     diverged_at = 1e8 * jnp.maximum(rnorm0, pt.tree_norm(b_flat))
 
     def cond(state):
-        j, _, _, _, _, _, rnorm, _, brk = state
-        return (j < maxiter) & (rnorm > threshold) & (~brk)
+        j, _, _, _, _, _, rnorm, _, fail, _ = state
+        return (j < maxiter) & (rnorm > threshold) & (fail == 0)
 
     def body(state):
-        j, x, r, z, p, rz, rnorm, trace, brk = state
+        j, x, r, z, p, rz, rnorm, trace, fail, stag = state
         ap = A_flat(p)
         d = pt.tree_dot(p, ap)
-        brk = (d <= 0.0) | (~jnp.isfinite(d)) | (rnorm > diverged_at)
-        alpha = jnp.where(brk, 0.0, rz / jnp.where(brk, 1.0, d))
+        bad, code = _classify_breakdown(d, rnorm, diverged_at)
+        fail = jnp.where(fail > 0, fail, code)
+        # Sanitize a poisoned A·p before it reaches the update pass:
+        # alpha is zeroed on breakdown, but 0·NaN would still poison x/r.
+        ap = jnp.where(bad, 0.0, ap)
+        alpha = jnp.where(bad, 0.0, rz / jnp.where(bad, 1.0, d))
         x, r, rr, _ = kops.fused_cg_update(x, r, p, ap, alpha)
         if precond is not None:
             z = precond(r)
@@ -188,24 +272,47 @@ def cg(
         beta = rz_new / jnp.where(rz == 0.0, 1.0, rz)
         p, _, _ = kops.fused_deflate_direction(z, p, beta)
         rnorm = jnp.sqrt(rr)
+        fail = jnp.where(
+            (fail == 0) & (~jnp.isfinite(rnorm)),
+            SolveStatus.BREAKDOWN_NONFINITE,
+            fail,
+        ).astype(jnp.int32)
+        if stag is not None:
+            best, stall = stag
+            improved = rnorm < _STAGNATION_RTOL * best
+            stall = jnp.where(improved, 0, stall + 1).astype(jnp.int32)
+            best = jnp.minimum(best, rnorm)
+            fail = jnp.where(
+                (fail == 0) & (stall >= stagnation_window),
+                SolveStatus.STAGNATED,
+                fail,
+            ).astype(jnp.int32)
+            stag = (best, stall)
         if trace is not None:
             trace = trace.at[j + 1].set(rnorm)
-        return (j + 1, x, r, z, p, rz_new, rnorm, trace, brk)
+        return (j + 1, x, r, z, p, rz_new, rnorm, trace, fail, stag)
 
+    # A non-finite initial residual (poisoned x0 / operator) never enters
+    # the loop — flag it so status reads BREAKDOWN_NONFINITE, not MAXITER.
+    fail0 = jnp.where(
+        jnp.isfinite(rnorm0), 0, SolveStatus.BREAKDOWN_NONFINITE
+    ).astype(jnp.int32)
+    stag0 = (rnorm0, jnp.int32(0)) if stagnation_window > 0 else None
     state = (
-        jnp.int32(0), x_flat, r0, z0, p0, rz0, rnorm0, trace0,
-        jnp.bool_(False),
+        jnp.int32(0), x_flat, r0, z0, p0, rz0, rnorm0, trace0, fail0, stag0,
     )
-    j, x, _, _, _, _, rnorm, trace, brk = jax.lax.while_loop(
+    j, x, _, _, _, _, rnorm, trace, fail, _ = jax.lax.while_loop(
         cond, body, state
     )
+    converged = rnorm <= threshold
     info = SolveInfo(
         iterations=j,
-        converged=rnorm <= threshold,
+        converged=converged,
         residual_norm=rnorm,
         matvecs=j + 1,
         residual_norms=trace,
-        breakdown=brk,
+        breakdown=fail > 0,
+        status=_exit_status(converged, fail),
     )
     return CGResult(x=unravel(x), info=info)
 
@@ -246,6 +353,7 @@ def defcg(
     M: Optional[Callable[[Pytree], Pytree]] = None,
     batch_axis: Optional[str] = None,
     stale_guard: Optional[float] = None,
+    stagnation_window: int = 0,
 ) -> CGResult:
     """Deflated CG — ``def-CG(k, ell)`` of the paper (k = basis size of W).
 
@@ -313,6 +421,11 @@ def defcg(
          unbatched, so the ``cond`` survives ``vmap`` and the operator is
          skipped once EVERY lane is frozen.  ``None`` (default) keeps the
          per-lane gate.
+      stagnation_window: > 0 enables the stalled-residual detector: the
+         solve is stopped with STAGNATED status when the best ‖r‖ seen
+         fails to improve by 1% over this many consecutive iterations.
+         The default 0 carries no extra loop state and adds no checks —
+         the clean path is bit-identical to a detector-free solve.
 
     Internals: the whole solve — setup (Wᵀ A W factorization, deflated
     initial guess) and iteration — runs on the flat engine: the vector
@@ -335,6 +448,7 @@ def defcg(
     b_flat, unravel = pt.ravel_vector(b)
     threshold, _ = _tolerances(b_flat, tol, atol)
     matvecs = jnp.int32(0)
+    guard_fired = jnp.bool_(False)
 
     A_flat = _flat_operator(A, unravel)
     precond = _flat_operator(M, unravel) if M is not None else None
@@ -444,6 +558,7 @@ def defcg(
                     jax.lax.cond(refresh, _refresh_setup, _keep_setup, None)
                 )
                 matvecs = matvecs + k * refresh.astype(matvecs.dtype)
+                guard_fired = refresh
 
         if waw_inv is None:  # exact or unguarded-stale setup
             z_flat = precond(r_flat) if precond is not None else r_flat
@@ -466,9 +581,9 @@ def defcg(
 
     diverged_at = 1e8 * jnp.maximum(rnorm0, pt.tree_norm(b_flat))
 
-    def active_fn(j, rnorm, brk):
+    def active_fn(j, rnorm, fail):
         keep_going = (rnorm > threshold) | (j < min_iters)
-        return (j < maxiter) & keep_going & (~brk)
+        return (j < maxiter) & keep_going & (fail == 0)
 
     def step(state, active, gate_matvec):
         """One def-CG iteration; ``active=False`` freezes the state.
@@ -481,7 +596,7 @@ def defcg(
         measured slower on active steps (branch-boundary state copies)
         than letting the no-op passes run.
         """
-        j, x, r, p, rs, rnorm, trace, brk = state
+        j, x, r, p, rs, rnorm, trace, fail, stag = state
         if gate_matvec:
             if batch_axis is None:
                 run_mv = active
@@ -496,8 +611,13 @@ def defcg(
         else:
             ap = A_flat(p)
         d = pt.tree_dot(p, ap)
-        bad = (d <= 0.0) | (~jnp.isfinite(d)) | (rnorm > diverged_at)
-        brk = brk | (active & bad)
+        bad, code = _classify_breakdown(d, rnorm, diverged_at)
+        fail = jnp.where((fail == 0) & active, code, fail)
+        # Sanitize a poisoned A·p before the fused passes touch it: alpha
+        # is zeroed on breakdown, but 0·NaN = NaN would still poison x, r,
+        # and (through μ) the next direction — a broken step must leave
+        # the last HEALTHY iterate in state for the recovery ladder.
+        ap = jnp.where(bad, 0.0, ap)
         alpha = jnp.where(bad | (~active), 0.0, rs / jnp.where(bad, 1.0, d))
 
         mu = None
@@ -527,20 +647,51 @@ def defcg(
         beta = rs_new / jnp.where(rs == 0.0, 1.0, rs)
 
         p_new, _, _ = kops.fused_deflate_direction(zvec, p, beta, w_flat, mu)
-        p = jnp.where(active, p_new, p)
+        # Freeze p on breakdown too (not just inactivity): a poisoned
+        # basis/preconditioner can make p_new non-finite through μ even
+        # with a sanitized A·p.
+        p = jnp.where(active & (~bad), p_new, p)
 
-        rnorm = jnp.sqrt(rr)
+        rnorm_new = jnp.sqrt(rr)
+        fail = jnp.where(
+            (fail == 0) & active & (~jnp.isfinite(rnorm_new)),
+            SolveStatus.BREAKDOWN_NONFINITE,
+            fail,
+        ).astype(jnp.int32)
+        rnorm = jnp.where(active, rnorm_new, rnorm)
+        if stag is not None:
+            best, stall = stag
+            improved = rnorm_new < _STAGNATION_RTOL * best
+            stall_new = jnp.where(improved, 0, stall + 1).astype(jnp.int32)
+            fail = jnp.where(
+                (fail == 0) & active & (stall_new >= stagnation_window),
+                SolveStatus.STAGNATED,
+                fail,
+            ).astype(jnp.int32)
+            stag = (
+                jnp.where(active, jnp.minimum(best, rnorm_new), best),
+                jnp.where(active, stall_new, stall),
+            )
         if trace is not None:
             # Frozen steps rewrite slot j+1 with its old value, keeping
             # the NaN tail of the trace untouched.
             old = trace[j + 1]
             trace = trace.at[j + 1].set(jnp.where(active, rnorm, old))
         j = j + active.astype(j.dtype)
-        return (j, x, r, p, rs_new, rnorm, trace, brk), (ap, alpha, beta)
+        return (j, x, r, p, rs_new, rnorm, trace, fail, stag), (
+            ap, alpha, beta,
+        )
 
+    # A non-finite initial residual (poisoned basis/operator reached the
+    # deflated setup) never enters the loop — flag it so the exit status
+    # reads BREAKDOWN_NONFINITE rather than a 0-iteration MAXITER.
+    fail0 = jnp.where(
+        jnp.isfinite(rnorm0), 0, SolveStatus.BREAKDOWN_NONFINITE
+    ).astype(jnp.int32)
+    stag0 = (rnorm0, jnp.int32(0)) if stagnation_window > 0 else None
     state = (
         jnp.int32(0), x_flat, r_flat, p_flat, rs0, rnorm0, trace0,
-        jnp.bool_(False),
+        fail0, stag0,
     )
 
     p_rows = ap_rows = a_rows = b_rows = None
@@ -570,15 +721,20 @@ def defcg(
     def body(state):
         return step(state, jnp.bool_(True), gate_matvec=False)[0]
 
-    j, x, _, _, _, rnorm, trace, brk = jax.lax.while_loop(cond, body, state)
+    j, x, _, _, _, rnorm, trace, fail, _ = jax.lax.while_loop(
+        cond, body, state
+    )
 
+    converged = rnorm <= threshold
     info = SolveInfo(
         iterations=j,
-        converged=rnorm <= threshold,
+        converged=converged,
         residual_norm=rnorm,
         matvecs=matvecs + j,
         residual_norms=trace,
-        breakdown=brk,
+        breakdown=fail > 0,
+        status=_exit_status(converged, fail),
+        guard_fired=guard_fired,
     )
     recycle = None
     if ell > 0:
@@ -632,11 +788,11 @@ def cholesky_solve(mat: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
 
 _cg_jit_traced_m = jax.jit(
     cg,
-    static_argnames=("tol", "atol", "maxiter", "record_residuals"),
+    static_argnames=("tol", "atol", "maxiter", "record_residuals", "stagnation_window"),
 )
 _cg_jit_static_m = jax.jit(
     cg,
-    static_argnames=("tol", "atol", "maxiter", "M", "record_residuals"),
+    static_argnames=("tol", "atol", "maxiter", "M", "record_residuals", "stagnation_window"),
 )
 
 
@@ -664,5 +820,6 @@ defcg_jit = jax.jit(
         "flat_recycle",
         "batch_axis",
         "stale_guard",
+        "stagnation_window",
     ),
 )

@@ -20,6 +20,7 @@ EXPECTED_CORE_ALL = sorted(
         # front doors (core/api.py)
         "BatchSolveResult",
         "SequenceSolveResult",
+        "SolveReport",
         "SolveResult",
         "SolveSpec",
         "make_preconditioner",
@@ -28,6 +29,9 @@ EXPECTED_CORE_ALL = sorted(
         "solve_batch_jit",
         "solve_jit",
         "solve_sequence",
+        # fault injection (ISSUE 6: chaos instrumentation)
+        "FaultInjectingOperator",
+        "truncate_latest_checkpoint",
         # operators
         "GGNOperator",
         "KernelSystemOperator",
@@ -45,6 +49,7 @@ EXPECTED_CORE_ALL = sorted(
         "nystrom_preconditioner",
         "randomized_nystrom",
         # recycling
+        "MAX_RECOVERY_RUNGS",
         "RecycleManager",
         "RecycleState",
         "SequenceResult",
@@ -58,6 +63,7 @@ EXPECTED_CORE_ALL = sorted(
         "CGResult",
         "RecycleData",
         "SolveInfo",
+        "SolveStatus",
         "cg",
         "cholesky_solve",
         "defcg",
@@ -85,7 +91,20 @@ EXPECTED_SOLVESPEC_FIELDS = {
     "precond_rank": 16,
     "precond_sigma": 1.0,
     "strategy": HarmonicRitz(),
+    # ISSUE 6: the fault-tolerance knobs
+    "recovery_rungs": 3,
+    "recovery_shift": 1e-6,
+    "stagnation_window": 0,
 }
+
+# Failure-handling diagnostics returned by every front door.
+EXPECTED_SOLVEREPORT_FIELDS = ("status", "rung", "guard_firings", "matvecs")
+
+
+def test_solvereport_field_schema():
+    from repro.core import SolveReport
+
+    assert SolveReport._fields == EXPECTED_SOLVEREPORT_FIELDS
 
 
 def test_core_all_snapshot():

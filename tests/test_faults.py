@@ -1,0 +1,355 @@
+"""Chaos tests for the fault-tolerant solve runtime (ISSUE 6).
+
+Every claim of the robustness layer is exercised against an ACTUAL
+injected fault, in the fast CI tier:
+
+  1. breakdown detection + recovery ladder — a NaN matvec mid-solve is
+     detected, classified, recovered from (transient) or retired
+     (persistent) with a finite solution and an honest
+     ``SolveReport``;
+  2. typed statuses — indefinite operators and stalled residuals get
+     BREAKDOWN_INDEFINITE / STAGNATED, not a silent MAXITER;
+  3. zero clean-path overhead — arming the ladder changes nothing on a
+     healthy sequence (same iterates, same matvecs, rung 0 everywhere);
+  4. crash-resumable sequences — chunked checkpointed runs match the
+     uninterrupted scan exactly, survive a mid-run kill, fall back past
+     a truncated checkpoint, and migrate old-schema state pytrees.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager, restore_pytree, save_pytree
+from repro.core import (
+    FaultInjectingOperator,
+    SolveSpec,
+    SolveStatus,
+    from_matrix,
+    solve,
+    solve_sequence,
+    truncate_latest_checkpoint,
+)
+from tests.conftest import make_spd
+
+
+def _spd(n=32, cond=1e2, seed=0):
+    rng = np.random.default_rng(seed)
+    mat, _, _ = make_spd(n, cond, rng)
+    b = rng.standard_normal(n)
+    return jnp.asarray(mat), jnp.asarray(b)
+
+
+def _drifting_sequence(n=40, num=5, seed=0):
+    """Stacked drifting SPD systems + rhs, raw-data pytree for the engine."""
+    rng = np.random.default_rng(seed)
+    base, _, _ = make_spd(n, 1e2, rng)
+    mats = jnp.stack(
+        [jnp.asarray(base + (1.0 + 0.05 * i) * np.eye(n)) for i in range(num)]
+    )
+    bs = jnp.asarray(rng.standard_normal((num, n)))
+    return mats, bs
+
+
+SPEC = SolveSpec(k=4, ell=8, tol=1e-8, maxiter=400)
+
+
+class TestBreakdownAndLadder:
+    def test_transient_nan_matvec_recovers(self):
+        """A NaN on one executed matvec mid-solve: the ladder redoes the
+        solve and converges, with the failed attempt charged."""
+        mat, b = _spd()
+        clean = solve(from_matrix(mat), b, SPEC)
+        assert int(clean.report.status) == SolveStatus.CONVERGED
+        assert int(clean.report.rung) == 0
+
+        op = FaultInjectingOperator(from_matrix(mat), at_matvec=3)
+        res = solve(op, b, SPEC)
+        assert bool(res.info.converged)
+        assert int(res.report.status) == SolveStatus.CONVERGED
+        assert int(res.report.rung) >= 1
+        # honest accounting: the broken attempt's matvecs are charged
+        assert int(res.report.matvecs) > int(clean.report.matvecs)
+        np.testing.assert_allclose(
+            np.asarray(res.x),
+            np.linalg.solve(np.asarray(mat), np.asarray(b)),
+            rtol=1e-5, atol=1e-7,
+        )
+
+    def test_persistent_corruption_retires_finitely(self):
+        """Every matvec poisoned: the full ladder fails, yet the front
+        door returns FINITE coordinates, a truthful status, and a
+        zeroed (retired) recycle state."""
+        mat, b = _spd(seed=1)
+        op = FaultInjectingOperator(from_matrix(mat), poison=jnp.nan)
+        res = solve(op, b, SPEC)
+        assert not bool(res.info.converged)
+        assert int(res.report.status) == SolveStatus.BREAKDOWN_NONFINITE
+        assert int(res.report.rung) == 3
+        assert bool(jnp.all(jnp.isfinite(res.x)))
+        # retirement: the next solve must bootstrap cold, not deflate
+        # with a poisoned basis
+        assert bool(jnp.all(res.state.W == 0))
+        assert bool(jnp.all(res.state.AW == 0))
+
+    def test_indefinite_operator_is_classified(self):
+        """pᵀAp < 0 on an indefinite operator reads
+        BREAKDOWN_INDEFINITE, not MAXITER."""
+        n = 16
+        diag = jnp.ones(n).at[-1].set(-1.0)
+        b = jnp.zeros(n).at[-1].set(1.0)
+        res = solve(
+            from_matrix(jnp.diag(diag)),
+            b,
+            SolveSpec(method="cg", tol=1e-10, maxiter=50),
+        )
+        assert not bool(res.info.converged)
+        assert int(res.report.status) == SolveStatus.BREAKDOWN_INDEFINITE
+        assert SolveStatus.describe(res.report.status) == (
+            "BREAKDOWN_INDEFINITE"
+        )
+
+    def test_stagnation_detector_stops_early(self):
+        """A bounded perturbation floors the residual; the armed
+        detector stops with STAGNATED instead of burning maxiter."""
+        mat, b = _spd(seed=2)
+        op = FaultInjectingOperator(from_matrix(mat), poison=1e-3)
+        res = solve(
+            op,
+            b,
+            SolveSpec(
+                method="cg",
+                tol=1e-12,
+                maxiter=400,
+                stagnation_window=10,
+                recovery_rungs=0,
+            ),
+        )
+        assert int(res.report.status) == SolveStatus.STAGNATED
+        assert int(res.info.iterations) < 400
+
+    def test_sequence_broken_system_is_isolated(self):
+        """One persistently-broken system inside a sequence: it is
+        retired with a truthful per-system status while its neighbors
+        (before AND after) still converge — the poison does not travel
+        through the recycled basis."""
+        mats, bs = _drifting_sequence()
+        poison = jnp.zeros(mats.shape[0]).at[2].set(jnp.nan)
+        systems = {"mat": mats, "poison": poison}
+
+        def make_op(s):
+            return FaultInjectingOperator(from_matrix(s["mat"]), s["poison"])
+
+        res = solve_sequence(systems, bs, SPEC, make_operator=make_op)
+        conv = np.asarray(res.info.converged)
+        status = np.asarray(res.report.status)
+        assert not conv[2]
+        assert status[2] == SolveStatus.BREAKDOWN_NONFINITE
+        assert int(res.report.rung[2]) == 3
+        healthy = [0, 1, 3, 4]
+        assert conv[healthy].all()
+        assert (status[healthy] == SolveStatus.CONVERGED).all()
+        assert bool(jnp.all(jnp.isfinite(res.x)))
+        # the broken system was charged for its failed attempts
+        mv = np.asarray(res.report.matvecs)
+        it = np.asarray(res.info.iterations)
+        assert mv[2] >= it[2] + 2
+
+    def test_clean_path_pays_nothing(self):
+        """Acceptance: arming the ladder must not change a healthy
+        sequence's iterates or matvec totals (fig2/table1 unchanged)."""
+        mats, bs = _drifting_sequence(seed=3)
+        systems = {"mat": mats}
+        mk = lambda s: from_matrix(s["mat"])  # noqa: E731
+        armed = solve_sequence(systems, bs, SPEC, make_operator=mk)
+        disarmed = solve_sequence(
+            systems, bs, SPEC, make_operator=mk, divergence_fallback=False
+        )
+        np.testing.assert_array_equal(
+            np.asarray(armed.info.iterations),
+            np.asarray(disarmed.info.iterations),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(armed.info.matvecs),
+            np.asarray(disarmed.info.matvecs),
+        )
+        assert (np.asarray(armed.report.rung) == 0).all()
+        np.testing.assert_allclose(
+            np.asarray(armed.x), np.asarray(disarmed.x), rtol=0, atol=0
+        )
+
+
+class _DyingManager(CheckpointManager):
+    """Kills the process (KeyboardInterrupt) after N successful saves."""
+
+    def __init__(self, directory, die_after):
+        super().__init__(directory)
+        self.saves = 0
+        self.die_after = die_after
+
+    def save(self, tree, step, **kw):
+        super().save(tree, step, **kw)
+        self.saves += 1
+        if self.saves >= self.die_after:
+            raise KeyboardInterrupt("simulated preemption")
+
+
+class TestResumableSequences:
+    def _run(self, mgr=None, resume=False, **kw):
+        mats, bs = _drifting_sequence()
+        systems = {"mat": mats}
+        mk = lambda s: from_matrix(s["mat"])  # noqa: E731
+        return solve_sequence(
+            systems,
+            bs,
+            SPEC,
+            make_operator=mk,
+            checkpoint=mgr,
+            checkpoint_every=2 if mgr is not None else 0,
+            resume=resume,
+            **kw,
+        )
+
+    def test_chunked_matches_unchunked(self, tmp_path):
+        whole = self._run()
+        chunked = self._run(CheckpointManager(str(tmp_path)))
+        np.testing.assert_allclose(
+            np.asarray(chunked.x), np.asarray(whole.x), rtol=0, atol=0
+        )
+        np.testing.assert_array_equal(
+            np.asarray(chunked.info.iterations),
+            np.asarray(whole.info.iterations),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(chunked.info.matvecs), np.asarray(whole.info.matvecs)
+        )
+        np.testing.assert_allclose(
+            np.asarray(chunked.state.W), np.asarray(whole.state.W),
+            rtol=0, atol=0,
+        )
+
+    def test_kill_and_resume_reproduces_iterates(self, tmp_path):
+        """Killed after the first chunk's checkpoint, resumed in a fresh
+        manager: bit-identical to the uninterrupted run."""
+        whole = self._run(CheckpointManager(str(tmp_path / "ref")))
+        with pytest.raises(KeyboardInterrupt):
+            self._run(_DyingManager(str(tmp_path / "ckpt"), die_after=1))
+        resumed = self._run(
+            CheckpointManager(str(tmp_path / "ckpt")), resume=True
+        )
+        np.testing.assert_allclose(
+            np.asarray(resumed.x), np.asarray(whole.x), rtol=0, atol=0
+        )
+        np.testing.assert_array_equal(
+            np.asarray(resumed.info.iterations),
+            np.asarray(whole.info.iterations),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(resumed.report.status),
+            np.asarray(whole.report.status),
+        )
+        np.testing.assert_allclose(
+            np.asarray(resumed.state.W), np.asarray(whole.state.W),
+            rtol=0, atol=0,
+        )
+
+    def test_resume_past_truncated_checkpoint(self, tmp_path):
+        """A torn-disk checkpoint (manifest intact, payload garbage) is
+        skipped WITH a recorded reason, and the run still completes."""
+        mgr = _DyingManager(str(tmp_path), die_after=2)
+        with pytest.raises(KeyboardInterrupt):
+            self._run(mgr)
+        step = truncate_latest_checkpoint(str(tmp_path))
+        assert step is not None
+        fresh = CheckpointManager(str(tmp_path))
+        resumed = self._run(fresh, resume=True)
+        whole = self._run()
+        np.testing.assert_allclose(
+            np.asarray(resumed.x), np.asarray(whole.x), rtol=0, atol=0
+        )
+        # the skip was observable, not a silent `except: continue`
+        assert fresh.last_skipped
+        assert fresh.last_skipped[0][0] == step
+
+
+class TestCheckpointSatellites:
+    def test_schema_migration_defaults_grown_leaf(self, tmp_path):
+        """A template that grew a field since the checkpoint was written
+        (the documented pre-PR-4 RecycleState.drift break) restores with
+        a warning instead of being rejected."""
+        old = {"w": jnp.arange(4.0)}
+        save_pytree(old, str(tmp_path), step=0)
+        template = {"w": jnp.zeros(4), "drift": jnp.float64(7.5)}
+        with pytest.warns(UserWarning, match="schema migration"):
+            out = restore_pytree(
+                template, str(tmp_path / "step_00000000")
+            )
+        np.testing.assert_array_equal(np.asarray(out["w"]), np.arange(4.0))
+        assert float(out["drift"]) == 7.5  # template default kept
+
+    def test_unknown_checkpoint_leaf_still_rejected(self, tmp_path):
+        """Dropping SAVED state silently is never safe — a checkpoint
+        leaf with no home in the template stays a hard error."""
+        save_pytree({"w": jnp.zeros(3), "extra": jnp.ones(2)},
+                    str(tmp_path), step=0)
+        with pytest.raises(ValueError, match="no home"):
+            restore_pytree({"w": jnp.zeros(3)},
+                           str(tmp_path / "step_00000000"))
+
+    def test_async_save_error_reraises(self, tmp_path, monkeypatch):
+        """A failed background write surfaces on the next wait()/save()
+        instead of masquerading as a committed checkpoint."""
+        from repro.checkpoint import manager as manager_mod
+
+        mgr = CheckpointManager(str(tmp_path))
+
+        def boom(*a, **k):
+            raise OSError("disk full")
+
+        monkeypatch.setattr(manager_mod, "save_pytree", boom)
+        mgr.save({"w": jnp.zeros(2)}, step=0, blocking=False)
+        with pytest.raises(RuntimeError, match="NOT committed"):
+            mgr.wait()
+        # the error is raised ONCE, then cleared
+        mgr.wait()
+
+    def test_resume_kwargs_need_checkpoint(self):
+        mats, bs = _drifting_sequence(num=2)
+        with pytest.raises(ValueError, match="CheckpointManager"):
+            solve_sequence(
+                {"mat": mats}, bs, SPEC,
+                make_operator=lambda s: from_matrix(s["mat"]),
+                checkpoint_every=2,
+            )
+
+
+class TestFaultOperatorUnit:
+    def test_poison_arithmetic(self):
+        mat, _ = _spd(n=8)
+        v = jnp.ones(8)
+        op = FaultInjectingOperator(from_matrix(mat), poison=0.5)
+        np.testing.assert_allclose(
+            np.asarray(op(v)), np.asarray(mat @ v + 0.5), rtol=1e-12
+        )
+
+    def test_is_a_pytree_with_traced_poison(self):
+        mat, _ = _spd(n=8)
+        op = FaultInjectingOperator(from_matrix(mat), poison=jnp.float64(0.0))
+        leaves = jax.tree_util.tree_leaves(op)
+        assert any(np.asarray(l).shape == () for l in leaves)
+
+    def test_host_counter_counts(self):
+        mat, _ = _spd(n=8)
+        op = FaultInjectingOperator(from_matrix(mat), at_matvec=1)
+        v = jnp.ones(8)
+        out0 = op(v)
+        out1 = op(v)  # poisoned
+        out2 = op(v)
+        assert op.executed_matvecs == 3
+        assert bool(jnp.all(jnp.isfinite(out0)))
+        assert not bool(jnp.all(jnp.isfinite(out1)))
+        assert bool(jnp.all(jnp.isfinite(out2)))
+        op.reset()
+        assert op.executed_matvecs == 0
