@@ -1,0 +1,51 @@
+"""repro.analysis — the repo's static analyzer + executable trace-audit gate.
+
+Every hard bug class fixed in PRs 2–6 is statically (or cheaply
+dynamically) detectable: host syncs hiding in traced code, ``lax.cond``
+predicates that silently become per-lane ``select`` under vmap, pytree
+leaf renames that orphan checkpoints, exceptions swallowed in daemon
+threads.  This package turns those reviewer-head invariants into a
+checked-in gate:
+
+* AST lint rules (``repro.analysis.rules``) with inline suppressions
+  (``# repro-lint: disable=rule — why``) and a grandfathering baseline
+  (``analysis/baseline.json`` at the repo root).
+* An executable schema check (``repro.analysis.schema``) pinning the
+  ``RecycleState``/``SolveSpec``/``SolveReport`` leaf-and-field
+  manifests against ``schema_manifest.json``.
+* A trace audit (``repro.analysis.trace_audit``) that jits the three
+  front doors under ``jax.check_tracer_leaks``, asserts compile budgets,
+  and greps the lowered jaxprs for forbidden host callbacks.
+
+CLI::
+
+    python -m repro.analysis src/              # AST rules only (fast)
+    python -m repro.analysis --all src/        # + schema + trace audit
+    python -m repro.analysis --update-baseline src/
+    python -m repro.analysis --update-schema
+
+Exit code 0 iff no *new* violations (suppressed and baselined findings
+are reported but do not fail).  See DESIGN.md §10 for the rule
+catalogue and the policy on suppressions vs baseline entries.
+"""
+
+from repro.analysis.engine import (
+    LintConfig,
+    LintResult,
+    Violation,
+    load_baseline,
+    run_lint,
+    write_baseline,
+)
+from repro.analysis.rules import ALL_RULES, RULE_NAMES
+
+__all__ = [
+    "ALL_RULES",
+    "LintConfig",
+    "LintResult",
+    "RULE_NAMES",
+    "Violation",
+    "load_baseline",
+    "run_lint",
+    "write_baseline",
+]

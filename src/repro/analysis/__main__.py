@@ -1,0 +1,141 @@
+"""CLI: ``python -m repro.analysis [paths...]``.
+
+Runs the AST rules (always), plus the schema manifest check and the
+executable trace audit with ``--all`` (what CI's ``lint`` job runs).
+Exit code 0 iff no NEW violations — inline-suppressed and baselined
+findings are summarized but do not fail the gate.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from repro.analysis import engine
+
+DEFAULT_BASELINE = os.path.join("analysis", "baseline.json")
+
+
+def _find_baseline(explicit: str | None) -> str | None:
+    """``--baseline`` wins; otherwise walk up from CWD for the repo's
+    ``analysis/baseline.json`` (so the CLI works from subdirectories)."""
+    if explicit is not None:
+        return explicit
+    cur = os.getcwd()
+    for _ in range(8):
+        cand = os.path.join(cur, DEFAULT_BASELINE)
+        if os.path.exists(cand):
+            return cand
+        nxt = os.path.dirname(cur)
+        if nxt == cur:
+            break
+        cur = nxt
+    return None
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repro static analyzer + trace-audit gate "
+                    "(DESIGN.md §10)",
+    )
+    parser.add_argument(
+        "paths", nargs="*", default=["src"],
+        help="files/directories to lint (default: src)",
+    )
+    parser.add_argument(
+        "--all", action="store_true",
+        help="also run the schema manifest check and the executable "
+             "trace audit (imports jax and runs tiny solves)",
+    )
+    parser.add_argument(
+        "--trace-audit", action="store_true",
+        help="run only the executable trace audit (no AST lint)",
+    )
+    parser.add_argument(
+        "--baseline", default=None,
+        help=f"baseline file (default: nearest {DEFAULT_BASELINE})",
+    )
+    parser.add_argument(
+        "--update-baseline", action="store_true",
+        help="rewrite the baseline to grandfather every current finding "
+             "(use sparingly: prefer fixing or suppressing inline)",
+    )
+    parser.add_argument(
+        "--update-schema", action="store_true",
+        help="regenerate schema_manifest.json from the live classes "
+             "(after bumping checkpoint SCHEMA_VERSION)",
+    )
+    parser.add_argument(
+        "-q", "--quiet", action="store_true",
+        help="print only the final summary line",
+    )
+    args = parser.parse_args(argv)
+
+    if args.update_schema:
+        from repro.analysis import schema
+
+        path = schema.write_manifest()
+        print(f"wrote {path}")
+        if not (args.all or args.trace_audit or args.update_baseline):
+            return 0
+
+    violations: list = []
+    lines: list = []
+
+    if not args.trace_audit:
+        paths = [p for p in (args.paths or ["src"])]
+        baseline_path = _find_baseline(args.baseline)
+        baseline = engine.load_baseline(baseline_path)
+        result = engine.run_lint(paths, baseline=baseline)
+        if args.update_baseline:
+            target = baseline_path or DEFAULT_BASELINE
+            os.makedirs(os.path.dirname(target) or ".", exist_ok=True)
+            engine.write_baseline(
+                target, result.violations + result.baselined
+            )
+            print(
+                f"baselined {len(result.violations + result.baselined)} "
+                f"finding(s) into {target}"
+            )
+            return 0
+        violations.extend(result.violations)
+        lines.append(
+            f"lint: {result.files_scanned} file(s), "
+            f"{len(result.violations)} new violation(s), "
+            f"{len(result.baselined)} baselined, "
+            f"{result.suppressed} suppressed"
+        )
+        if not args.quiet:
+            for v in result.baselined:
+                print(f"baselined: {v.format()}")
+
+    if args.all or args.trace_audit:
+        from repro.analysis import schema, trace_audit
+
+        schema_vs = schema.check_manifest()
+        violations.extend(schema_vs)
+        lines.append(
+            f"schema: {'OK' if not schema_vs else f'{len(schema_vs)} mismatch(es)'}"
+        )
+        audit_vs, audit_lines = trace_audit.run_trace_audit()
+        violations.extend(audit_vs)
+        lines.extend(audit_lines)
+
+    for v in violations:
+        print(v.format())
+    for line in lines:
+        print(line)
+    if violations:
+        print(
+            f"FAILED: {len(violations)} new violation(s) — fix, or "
+            "suppress inline with `# repro-lint: disable=<rule> — why`"
+        )
+        return 1
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,733 @@
+"""AST lint rules encoding the repo's trace-discipline invariants.
+
+Each rule is a small object with a ``name`` and a
+``check(tree, src, relpath, ctx) -> [Violation]`` method; the engine
+(``repro.analysis.engine``) runs every rule over every scanned file and
+applies suppressions/baselining.  Rules are *static over-approximations*
+— when a rule cannot prove a pattern safe it flags it, and the author
+answers with an inline ``# repro-lint: disable=rule — why`` that
+documents the intent.  The catalogue (see DESIGN.md §10):
+
+``host-sync-in-trace``
+    ``int()``/``float()``/``bool()``/``.item()``/``np.*`` reachable from
+    jit'd or scanned functions in the traced packages (``core/``,
+    ``kernels/``).  Each such call blocks on device→host transfer and —
+    when the value feeds Python control flow — bakes it into the trace,
+    recompiling per distinct value (the PR 2 ``int(stored)`` bug class).
+
+``kernel-contract``
+    Every public op in ``kernels/ops.py`` taking an ``impl`` keyword
+    must dispatch all four backends (pallas/interpret/reference/
+    chunked), reference a ``ref.py`` oracle, and be exercised by name
+    somewhere under ``tests/``.
+
+``pytree-schema``
+    Registered pytree classes must define their flatten/unflatten pair,
+    and keyed registrations must use literal key names — dynamic keys
+    break the name-matched checkpoint restore (the PR 4 leaf-rename
+    break class).
+
+``static-spec-frozen``
+    Dataclasses used as static jit arguments (``*Spec``/``*Strategy`` or
+    ``_register_strategy``-decorated) must be ``frozen=True`` (hashable)
+    and must not declare array-typed fields (a leaf in a static arg
+    retraces per value — or is simply unhashable).
+
+``cond-batched-pred``
+    A ``lax.cond`` whose predicate is traced data without an axis-name
+    reduction (``lax.psum``/``pmax``/…) lowers to a per-lane ``select``
+    under ``vmap`` — both branches execute for every lane (the PR 4
+    solve_batch early-exit regression class).  The rule cannot see
+    vmap-ness across call boundaries, so it flags every un-reduced
+    traced predicate in the traced packages; genuinely unbatched sites
+    carry a suppression explaining why.
+
+``bare-except`` / ``swallowed-thread-exc``
+    ``except:`` catches ``KeyboardInterrupt``/``SystemExit``; an
+    exception handler inside a ``threading.Thread`` target that neither
+    re-raises nor stores the caught exception dies silently with the
+    thread (the PR 6 async-checkpoint bug class).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.engine import LintConfig, Violation
+
+# jax entry points whose function-valued arguments run under trace.
+_TRACE_ENTRY_NAMES = {
+    "jit",
+    "vmap",
+    "pmap",
+    "scan",
+    "while_loop",
+    "fori_loop",
+    "cond",
+    "switch",
+    "checkpoint",
+    "remat",
+    "shard_map",
+    "grad",
+    "value_and_grad",
+    "custom_jvp",
+    "custom_vjp",
+    "associative_scan",
+    "map",
+}
+
+# Axis-name collectives that turn a per-lane predicate into an unbatched
+# cross-lane one (safe under vmap).
+_AXIS_REDUCTIONS = {
+    "psum",
+    "pmax",
+    "pmin",
+    "pmean",
+    "all_gather",
+    "all_to_all",
+    "axis_index",
+    "psum_scatter",
+}
+
+# Host-returning builtins flagged inside traced code.
+_HOST_CASTS = {"int", "float", "bool"}
+_HOST_METHODS = {"item", "tolist", "block_until_ready"}
+
+
+@dataclasses.dataclass
+class RuleContext:
+    """Per-file context handed to each rule by the engine."""
+
+    config: LintConfig
+    abspath: str
+    src_lines: List[str]
+
+    def line_text(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.src_lines):
+            return self.src_lines[lineno - 1]
+        return ""
+
+    def make(self, rule: str, node: ast.AST, message: str,
+             relpath: str) -> Violation:
+        line = getattr(node, "lineno", 0)
+        col = getattr(node, "col_offset", 0)
+        return Violation(
+            rule=rule,
+            path=relpath,
+            line=line,
+            col=col,
+            message=message,
+            source=self.line_text(line).strip(),
+        )
+
+
+# ---------------------------------------------------------------------------
+# shared AST helpers
+# ---------------------------------------------------------------------------
+
+
+def _attr_name(node: ast.AST) -> Optional[str]:
+    """Terminal name of a Name/Attribute chain (``jax.lax.cond`` → ``cond``)."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def _parent_map(tree: ast.AST) -> Dict[ast.AST, ast.AST]:
+    parents: Dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+    return parents
+
+
+def _enclosing_function(
+    node: ast.AST, parents: Dict[ast.AST, ast.AST]
+) -> Optional[ast.AST]:
+    cur = parents.get(node)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return cur
+        cur = parents.get(cur)
+    return None
+
+
+def _in_traced_package(relpath: str, config: LintConfig) -> bool:
+    parts = relpath.split("/")
+    if not any(p in config.traced_packages for p in parts[:-1]):
+        return False
+    return not any(a.rstrip("/") in relpath for a in
+                   config.host_side_allowlist)
+
+
+def _is_jit_decorator(dec: ast.AST) -> bool:
+    """jit / jax.jit / jax.jit(...) / partial(jax.jit, ...) / checkpoint."""
+    target = dec.func if isinstance(dec, ast.Call) else dec
+    name = _attr_name(target)
+    if name in ("jit", "filter_jit", "checkpoint", "remat"):
+        return True
+    if name == "partial" and isinstance(dec, ast.Call) and dec.args:
+        return _attr_name(dec.args[0]) == "jit"
+    return False
+
+
+def _traced_functions(tree: ast.AST) -> Set[ast.AST]:
+    """Over-approximate the set of function defs whose bodies run under
+    trace: jit-decorated roots, functions handed to jax transforms, and
+    everything they reference by name (transitively).
+
+    Reference propagation is by *name* (bare loads and ``.attr(...)``
+    calls) against locally-defined functions — deliberately coarse; a
+    false positive costs one documented suppression, a false negative
+    hides a retrace bug.
+    """
+    all_funcs = [
+        n
+        for n in ast.walk(tree)
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+    ]
+    by_name: Dict[str, List[ast.AST]] = {}
+    for f in all_funcs:
+        by_name.setdefault(f.name, []).append(f)
+
+    roots: Set[ast.AST] = set()
+    for f in all_funcs:
+        if any(_is_jit_decorator(d) for d in f.decorator_list):
+            roots.add(f)
+    # Functions passed (positionally or by keyword) to a transform call
+    # anywhere in the module, e.g. ``solve_jit = jax.jit(solve, ...)`` or
+    # ``lax.scan(step, ...)``.
+    for call in ast.walk(tree):
+        if not isinstance(call, ast.Call):
+            continue
+        if _attr_name(call.func) not in _TRACE_ENTRY_NAMES:
+            continue
+        cands = list(call.args) + [kw.value for kw in call.keywords]
+        for arg in cands:
+            if isinstance(arg, ast.Name) and arg.id in by_name:
+                roots.update(by_name[arg.id])
+
+    # Propagate through referenced local names.
+    traced: Set[ast.AST] = set()
+    work = list(roots)
+    while work:
+        f = work.pop()
+        if f in traced:
+            continue
+        traced.add(f)
+        for node in ast.walk(f):
+            name = None
+            if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+                name = node.id
+            elif isinstance(node, ast.Call):
+                name = _attr_name(node.func)
+            if name and name in by_name:
+                for g in by_name[name]:
+                    if g not in traced:
+                        work.append(g)
+    return traced
+
+
+# ---------------------------------------------------------------------------
+# host-sync-in-trace
+# ---------------------------------------------------------------------------
+
+
+class HostSyncInTrace:
+    name = "host-sync-in-trace"
+
+    @staticmethod
+    def _static_cast_arg(arg: ast.AST) -> bool:
+        """Casts the rule can prove host-static: constants, ``len()``,
+        and shape/dtype metadata (``x.shape[0]``, ``x.ndim``)."""
+        if isinstance(arg, ast.Constant):
+            return True
+        if isinstance(arg, ast.Call) and _attr_name(arg.func) == "len":
+            return True
+        node = arg
+        if isinstance(node, ast.Subscript):
+            node = node.value
+        if isinstance(node, ast.Attribute) and node.attr in (
+            "shape", "ndim", "size", "dtype",
+        ):
+            return True
+        return False
+
+    def check(self, tree, src, relpath, ctx) -> List[Violation]:
+        if not _in_traced_package(relpath, ctx.config):
+            return []
+        out: List[Violation] = []
+        seen: Set[Tuple[int, int]] = set()
+
+        def flag(node, msg):
+            key = (node.lineno, node.col_offset)
+            if key not in seen:
+                seen.add(key)
+                out.append(ctx.make(self.name, node, msg, relpath))
+
+        for fn in _traced_functions(tree):
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Call):
+                    fname = _attr_name(node.func)
+                    if (
+                        isinstance(node.func, ast.Name)
+                        and fname in _HOST_CASTS
+                        and node.args
+                        and not self._static_cast_arg(node.args[0])
+                    ):
+                        flag(
+                            node,
+                            f"`{fname}()` on traced data forces a host "
+                            "sync and bakes the value into the trace "
+                            "(retraces per distinct value); use jnp "
+                            "ops, or suppress if the argument is a "
+                            "static Python scalar",
+                        )
+                    elif (
+                        isinstance(node.func, ast.Attribute)
+                        and node.func.attr in _HOST_METHODS
+                    ):
+                        flag(
+                            node,
+                            f"`.{node.func.attr}()` forces a device→"
+                            "host transfer inside traced code",
+                        )
+                elif isinstance(node, ast.Attribute):
+                    if (
+                        isinstance(node.value, ast.Name)
+                        and node.value.id in ("np", "numpy")
+                    ):
+                        flag(
+                            node,
+                            f"`{node.value.id}.{node.attr}` is host-side "
+                            "numpy inside traced code; use jnp (or "
+                            "io_callback for intentional host hops)",
+                        )
+        return out
+
+
+# ---------------------------------------------------------------------------
+# kernel-contract
+# ---------------------------------------------------------------------------
+
+
+class KernelContract:
+    name = "kernel-contract"
+
+    @staticmethod
+    def _ref_defs(ops_abspath: str, ref_module: str) -> Set[str]:
+        ref_path = os.path.join(os.path.dirname(ops_abspath),
+                                ref_module + ".py")
+        if not os.path.exists(ref_path):
+            return set()
+        with open(ref_path) as f:
+            try:
+                ref_tree = ast.parse(f.read())
+            except SyntaxError:
+                return set()
+        return {
+            n.name
+            for n in ref_tree.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+        }
+
+    @staticmethod
+    def _tests_corpus(ops_abspath: str, tests_dir: str) -> str:
+        """Concatenated text of tests/*.py, found by walking up from the
+        ops module (returns "" when no tests directory exists — fixture
+        trees in unit tests)."""
+        cur = os.path.dirname(ops_abspath)
+        for _ in range(8):
+            cand = os.path.join(cur, tests_dir)
+            if os.path.isdir(cand):
+                chunks = []
+                for name in sorted(os.listdir(cand)):
+                    if name.endswith(".py"):
+                        with open(os.path.join(cand, name)) as f:
+                            chunks.append(f.read())
+                return "\n".join(chunks)
+            nxt = os.path.dirname(cur)
+            if nxt == cur:
+                break
+            cur = nxt
+        return ""
+
+    def check(self, tree, src, relpath, ctx) -> List[Violation]:
+        cfg = ctx.config
+        if not relpath.endswith(cfg.ops_module):
+            return []
+        out: List[Violation] = []
+        ref_defs = self._ref_defs(ctx.abspath, cfg.ref_module_name)
+        tests_text = self._tests_corpus(ctx.abspath, cfg.tests_dir_name)
+        for fn in tree.body:
+            if not isinstance(fn, ast.FunctionDef):
+                continue
+            if fn.name.startswith("_"):
+                continue
+            kwonly = {a.arg for a in fn.args.kwonlyargs}
+            if "impl" not in kwonly:
+                continue  # not under the contract (e.g. decode steps)
+            strings = {
+                n.value
+                for n in ast.walk(fn)
+                if isinstance(n, ast.Constant) and isinstance(n.value, str)
+            }
+            missing = [i for i in cfg.kernel_impls if i not in strings]
+            if missing:
+                out.append(ctx.make(
+                    self.name, fn,
+                    f"op `{fn.name}` does not dispatch impl(s) "
+                    f"{missing}: the contract requires all of "
+                    f"{list(cfg.kernel_impls)}",
+                    relpath,
+                ))
+            orefs = {
+                n.attr
+                for n in ast.walk(fn)
+                if isinstance(n, ast.Attribute)
+                and isinstance(n.value, ast.Name)
+                and n.value.id == cfg.ref_module_name
+            }
+            if not orefs:
+                out.append(ctx.make(
+                    self.name, fn,
+                    f"op `{fn.name}` never references a "
+                    f"`{cfg.ref_module_name}.*` oracle",
+                    relpath,
+                ))
+            else:
+                absent = sorted(o for o in orefs if o not in ref_defs)
+                if absent:
+                    out.append(ctx.make(
+                        self.name, fn,
+                        f"op `{fn.name}` references oracle(s) {absent} "
+                        f"not defined in {cfg.ref_module_name}.py",
+                        relpath,
+                    ))
+            if tests_text and not re.search(
+                rf"\b{re.escape(fn.name)}\b", tests_text
+            ):
+                out.append(ctx.make(
+                    self.name, fn,
+                    f"op `{fn.name}` has no parity test mentioning it "
+                    f"under {cfg.tests_dir_name}/",
+                    relpath,
+                ))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# pytree-schema
+# ---------------------------------------------------------------------------
+
+_PYTREE_DECORATORS = {
+    "register_pytree_node_class": ("tree_flatten", "tree_unflatten"),
+    "register_pytree_with_keys_class": (
+        "tree_flatten_with_keys", "tree_unflatten",
+    ),
+}
+_KEY_CTORS = {"GetAttrKey", "DictKey", "SequenceKey", "FlattenedIndexKey"}
+
+
+class PytreeSchema:
+    name = "pytree-schema"
+
+    def check(self, tree, src, relpath, ctx) -> List[Violation]:
+        out: List[Violation] = []
+        for cls in ast.walk(tree):
+            if not isinstance(cls, ast.ClassDef):
+                continue
+            reg = None
+            for dec in cls.decorator_list:
+                target = dec.func if isinstance(dec, ast.Call) else dec
+                dn = _attr_name(target)
+                if dn in _PYTREE_DECORATORS:
+                    reg = dn
+            if reg is None:
+                continue
+            methods = {
+                n.name for n in cls.body if isinstance(n, ast.FunctionDef)
+            }
+            for required in _PYTREE_DECORATORS[reg]:
+                if required not in methods:
+                    out.append(ctx.make(
+                        self.name, cls,
+                        f"pytree class `{cls.name}` ({reg}) is missing "
+                        f"`{required}`",
+                        relpath,
+                    ))
+            if reg == "register_pytree_with_keys_class":
+                for node in ast.walk(cls):
+                    if (
+                        isinstance(node, ast.Call)
+                        and _attr_name(node.func) in _KEY_CTORS
+                        and node.args
+                        and not isinstance(node.args[0], ast.Constant)
+                    ):
+                        out.append(ctx.make(
+                            self.name, node,
+                            f"`{cls.name}` builds a pytree key from a "
+                            "non-literal: keys must be stable string "
+                            "constants or checkpoint name-matching "
+                            "breaks silently",
+                            relpath,
+                        ))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# static-spec-frozen
+# ---------------------------------------------------------------------------
+
+
+class StaticSpecFrozen:
+    name = "static-spec-frozen"
+
+    @staticmethod
+    def _dataclass_dec(cls: ast.ClassDef) -> Optional[ast.AST]:
+        for dec in cls.decorator_list:
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            if _attr_name(target) == "dataclass":
+                return dec
+        return None
+
+    def check(self, tree, src, relpath, ctx) -> List[Violation]:
+        cfg = ctx.config
+        pat = re.compile(cfg.static_spec_pattern)
+        out: List[Violation] = []
+        for cls in ast.walk(tree):
+            if not isinstance(cls, ast.ClassDef):
+                continue
+            dec_names = {
+                _attr_name(d.func if isinstance(d, ast.Call) else d)
+                for d in cls.decorator_list
+            }
+            is_spec = bool(pat.match(cls.name)) or bool(
+                dec_names & set(cfg.static_spec_decorators)
+            )
+            dc = self._dataclass_dec(cls)
+            if not is_spec or dc is None:
+                continue
+            frozen = False
+            if isinstance(dc, ast.Call):
+                for kw in dc.keywords:
+                    if (
+                        kw.arg == "frozen"
+                        and isinstance(kw.value, ast.Constant)
+                        and kw.value.value is True
+                    ):
+                        frozen = True
+            if not frozen:
+                out.append(ctx.make(
+                    self.name, cls,
+                    f"static-spec dataclass `{cls.name}` must be "
+                    "@dataclass(frozen=True): static jit args are "
+                    "hashed, and mutation after first use silently "
+                    "desyncs the compile cache",
+                    relpath,
+                ))
+            for stmt in cls.body:
+                if not isinstance(stmt, ast.AnnAssign):
+                    continue
+                try:
+                    ann = ast.unparse(stmt.annotation)
+                except Exception:
+                    continue
+                if re.search(r"\b(jax\.)?Array\b|\bndarray\b|jnp\.", ann):
+                    out.append(ctx.make(
+                        self.name, stmt,
+                        f"`{cls.name}.{ast.unparse(stmt.target)}` is "
+                        f"array-typed ({ann}): static jit args must be "
+                        "leaf-less (arrays are unhashable and would "
+                        "retrace per value) — carry arrays in the "
+                        "pytree side (e.g. RecycleState)",
+                        relpath,
+                    ))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# cond-batched-pred
+# ---------------------------------------------------------------------------
+
+
+class CondBatchedPred:
+    name = "cond-batched-pred"
+
+    @staticmethod
+    def _has_reduction(node: ast.AST) -> bool:
+        for n in ast.walk(node):
+            if isinstance(n, ast.Call) and _attr_name(n.func) in (
+                _AXIS_REDUCTIONS
+            ):
+                return True
+        return False
+
+    def _pred_is_reduced(
+        self,
+        pred: ast.AST,
+        fn: Optional[ast.AST],
+    ) -> bool:
+        """True when the predicate — or any assignment in its intra-
+        function dataflow chain — applies an axis-name collective."""
+        if self._has_reduction(pred):
+            return True
+        names = {
+            n.id
+            for n in ast.walk(pred)
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)
+        }
+        if not names or fn is None:
+            return bool(names) is False  # constant predicate: fine
+        assigns: Dict[str, List[ast.AST]] = {}
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    for t in ast.walk(tgt):
+                        if isinstance(t, ast.Name):
+                            assigns.setdefault(t.id, []).append(node.value)
+            elif isinstance(node, ast.AugAssign) and isinstance(
+                node.target, ast.Name
+            ):
+                assigns.setdefault(node.target.id, []).append(node.value)
+        seen: Set[str] = set()
+        work = list(names)
+        while work:
+            nm = work.pop()
+            if nm in seen:
+                continue
+            seen.add(nm)
+            for rhs in assigns.get(nm, ()):
+                if self._has_reduction(rhs):
+                    return True
+                for n in ast.walk(rhs):
+                    if isinstance(n, ast.Name) and n.id not in seen:
+                        work.append(n.id)
+        return False
+
+    def check(self, tree, src, relpath, ctx) -> List[Violation]:
+        if not _in_traced_package(relpath, ctx.config):
+            return []
+        parents = _parent_map(tree)
+        out: List[Violation] = []
+        for call in ast.walk(tree):
+            if not isinstance(call, ast.Call):
+                continue
+            func = call.func
+            if not (
+                isinstance(func, ast.Attribute)
+                and func.attr == "cond"
+                and _attr_name(func.value) == "lax"
+            ):
+                continue
+            if not call.args:
+                continue
+            pred = call.args[0]
+            if isinstance(pred, ast.Constant):
+                continue
+            fn = _enclosing_function(call, parents)
+            if not self._pred_is_reduced(pred, fn):
+                out.append(ctx.make(
+                    self.name, call,
+                    "`lax.cond` predicate has no axis-name reduction: "
+                    "under vmap it lowers to a per-lane `select` and "
+                    "BOTH branches run for every lane — reduce with "
+                    "`lax.psum(pred, axis) > 0` (see solve_batch), or "
+                    "suppress if this site can never be vmapped",
+                    relpath,
+                ))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# bare-except / swallowed-thread-exc
+# ---------------------------------------------------------------------------
+
+
+class BareExcept:
+    name = "bare-except"
+
+    def check(self, tree, src, relpath, ctx) -> List[Violation]:
+        out = []
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ExceptHandler) and node.type is None:
+                out.append(ctx.make(
+                    self.name, node,
+                    "bare `except:` also catches KeyboardInterrupt/"
+                    "SystemExit; catch Exception (or narrower)",
+                    relpath,
+                ))
+        return out
+
+
+class SwallowedThreadExc:
+    name = "swallowed-thread-exc"
+
+    @staticmethod
+    def _handler_propagates(handler: ast.ExceptHandler) -> bool:
+        """A handler is fine if it re-raises or stores/uses the caught
+        exception (``self._err = exc`` keeps it observable)."""
+        for n in ast.walk(handler):
+            if isinstance(n, ast.Raise):
+                return True
+            if (
+                handler.name
+                and isinstance(n, ast.Name)
+                and n.id == handler.name
+                and isinstance(n.ctx, ast.Load)
+            ):
+                return True
+        return False
+
+    def check(self, tree, src, relpath, ctx) -> List[Violation]:
+        funcs = {
+            n.name: n
+            for n in ast.walk(tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+        }
+        targets: Set[str] = set()
+        for call in ast.walk(tree):
+            if not isinstance(call, ast.Call):
+                continue
+            if _attr_name(call.func) != "Thread":
+                continue
+            for kw in call.keywords:
+                if kw.arg == "target" and isinstance(kw.value, ast.Name):
+                    targets.add(kw.value.id)
+        out = []
+        for name in sorted(targets):
+            fn = funcs.get(name)
+            if fn is None:
+                continue
+            for node in ast.walk(fn):
+                if isinstance(node, ast.ExceptHandler):
+                    if not self._handler_propagates(node):
+                        out.append(ctx.make(
+                            self.name, node,
+                            f"thread target `{name}` swallows the "
+                            "exception: a dead worker looks like a "
+                            "successful one — store it for the joiner "
+                            "to re-raise (see checkpoint.manager) or "
+                            "re-raise",
+                            relpath,
+                        ))
+        return out
+
+
+ALL_RULES = [
+    HostSyncInTrace(),
+    KernelContract(),
+    PytreeSchema(),
+    StaticSpecFrozen(),
+    CondBatchedPred(),
+    BareExcept(),
+    SwallowedThreadExc(),
+]
+
+RULE_NAMES = [r.name for r in ALL_RULES]

@@ -1,0 +1,168 @@
+"""Executable schema check: the live pytree/field manifest vs the
+checked-in one.
+
+The PR 4 checkpoint break — renaming a ``RecycleState`` leaf silently
+orphaned every existing checkpoint, because restore matches leaves *by
+name* — is exactly the class of regression an AST rule cannot catch (the
+rename is perfectly well-formed code).  So the schema half of the
+``pytree-schema`` gate is executable: :func:`compute_manifest` imports
+the real classes and derives the structure a checkpoint (and a jit
+cache key) actually depends on:
+
+* ``RecycleState``: the keyed-flatten leaf names, in flatten order, with
+  rank and dtype of the canonical cold template — the checkpoint
+  restore contract.
+* ``SolveSpec``: field names + reprs of defaults — the static jit cache
+  key (a changed default silently changes what "default spec" means for
+  every caller).
+* ``SolveReport``: the NamedTuple field order — positional destructuring
+  of reports is everywhere in tests and serving code.
+
+:func:`check_manifest` diffs that against ``schema_manifest.json``.  A
+mismatch is not (necessarily) a bug — it is an *unacknowledged contract
+change*.  To acknowledge one: bump ``SCHEMA_VERSION`` in
+``repro/checkpoint/manager.py`` (teach ``restore_pytree`` to migrate old
+leaves), then regenerate the manifest with
+``python -m repro.analysis --update-schema``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import List
+
+from repro.analysis.engine import Violation
+
+MANIFEST_BASENAME = "schema_manifest.json"
+
+
+def default_manifest_path() -> str:
+    return os.path.join(os.path.dirname(__file__), MANIFEST_BASENAME)
+
+
+def compute_manifest() -> dict:
+    """Derive the live schema from the imported classes (small template
+    instances; no solves run)."""
+    import jax
+
+    from repro.checkpoint import manager as ckpt_manager
+    from repro.core import RecycleState, SolveReport, SolveSpec
+
+    template = RecycleState.zeros(k=2, n=4)
+    leaves_with_keys, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in leaves_with_keys:
+        # One GetAttrKey per leaf for a flat keyed dataclass; join defensively
+        # so nested future leaves still get a stable dotted name.
+        name = ".".join(
+            getattr(k, "name", getattr(k, "key", str(k))) for k in path
+        )
+        leaves.append({
+            "key": name,
+            "ndim": int(getattr(leaf, "ndim", 0)),
+            "dtype": str(getattr(leaf, "dtype", type(leaf).__name__)),
+        })
+
+    spec_fields = [
+        {"name": f.name, "default": _default_repr(f)}
+        for f in dataclasses.fields(SolveSpec)
+    ]
+
+    return {
+        "_comment": (
+            "Checked-in leaf/field schema for the solver stack's public "
+            "carries.  If `python -m repro.analysis` reports a mismatch "
+            "here, you changed a checkpoint/jit contract: bump "
+            "SCHEMA_VERSION in repro/checkpoint/manager.py, add a "
+            "restore migration, then regenerate with "
+            "`python -m repro.analysis --update-schema`."
+        ),
+        "checkpoint_schema_version": int(ckpt_manager.SCHEMA_VERSION),
+        "RecycleState": {
+            "kind": "register_pytree_with_keys_class",
+            "leaves": leaves,
+            "num_leaves": treedef.num_leaves,
+        },
+        "SolveSpec": {
+            "kind": "frozen_dataclass(static-jit-arg)",
+            "fields": spec_fields,
+        },
+        "SolveReport": {
+            "kind": "NamedTuple",
+            "fields": list(SolveReport._fields),
+        },
+    }
+
+
+def _default_repr(f: "dataclasses.Field") -> str:
+    if f.default is not dataclasses.MISSING:
+        return repr(f.default)
+    if f.default_factory is not dataclasses.MISSING:  # type: ignore[misc]
+        return repr(f.default_factory())
+    return "<required>"
+
+
+def write_manifest(path: str | None = None) -> str:
+    path = path or default_manifest_path()
+    with open(path, "w") as f:
+        json.dump(compute_manifest(), f, indent=2)
+        f.write("\n")
+    return path
+
+
+def check_manifest(path: str | None = None) -> List[Violation]:
+    """Diff the live schema against the checked-in manifest; every
+    difference becomes one ``pytree-schema`` violation."""
+    path = path or default_manifest_path()
+    rel = os.path.basename(path)
+    if not os.path.exists(path):
+        return [Violation(
+            rule="pytree-schema", path=rel, line=0, col=0,
+            message=f"schema manifest missing at {path}; generate it "
+                    "with `python -m repro.analysis --update-schema`",
+        )]
+    with open(path) as f:
+        stored = json.load(f)
+    live = compute_manifest()
+    out: List[Violation] = []
+
+    def diff(key: str, stored_v, live_v, hint: str):
+        if stored_v != live_v:
+            out.append(Violation(
+                rule="pytree-schema", path=rel, line=0, col=0,
+                message=(
+                    f"{key} changed: manifest has {stored_v!r}, live code "
+                    f"has {live_v!r} — {hint}"
+                ),
+                source=key,
+            ))
+
+    diff(
+        "checkpoint_schema_version",
+        stored.get("checkpoint_schema_version"),
+        live["checkpoint_schema_version"],
+        "keep manager.SCHEMA_VERSION and the manifest in lockstep",
+    )
+    diff(
+        "RecycleState.leaves",
+        (stored.get("RecycleState") or {}).get("leaves"),
+        live["RecycleState"]["leaves"],
+        "renamed/retyped leaves orphan every existing checkpoint "
+        "(restore matches BY NAME); bump SCHEMA_VERSION + migrate",
+    )
+    diff(
+        "SolveSpec.fields",
+        (stored.get("SolveSpec") or {}).get("fields"),
+        live["SolveSpec"]["fields"],
+        "SolveSpec is the static jit cache key; changed fields/defaults "
+        "change every caller's default behavior",
+    )
+    diff(
+        "SolveReport.fields",
+        (stored.get("SolveReport") or {}).get("fields"),
+        live["SolveReport"]["fields"],
+        "SolveReport is destructured positionally; field order is API",
+    )
+    return out

@@ -46,6 +46,13 @@ logger = logging.getLogger(__name__)
 #   2: adds "schema_version"; restore matches leaves BY NAME, defaulting
 #     template leaves absent from the checkpoint (forward migration for
 #     state pytrees that grew fields — e.g. RecycleState gaining `drift`).
+#
+# Bumping this: restore matches BY NAME, so the checkpoint-visible leaf
+# names live in src/repro/analysis/schema_manifest.json — when a bump
+# renames/removes a RecycleState leaf (or changes SolveSpec defaults),
+# add the restore migration here, then regenerate the manifest with
+# `python -m repro.analysis --update-schema` (tests/test_schema_manifest.py
+# and the CI lint job diff it against live code).
 SCHEMA_VERSION = 2
 
 

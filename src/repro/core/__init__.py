@@ -23,6 +23,7 @@ from repro.core.api import (
 )
 from repro.core.faults import FaultInjectingOperator, truncate_latest_checkpoint
 from repro.core.operators import (
+    DenseMatrixOperator,
     GGNOperator,
     KernelSystemOperator,
     LinearOperator,
@@ -85,6 +86,7 @@ __all__ = [
     "truncate_latest_checkpoint",
     "GGNOperator",
     "KernelSystemOperator",
+    "DenseMatrixOperator",
     "LinearOperator",
     "apply_to_basis",
     "from_callable",

@@ -526,6 +526,28 @@ def _solve_sequence_spec(
     )
 
 
+# The chunked driver's per-chunk engine call, jitted ONCE at module
+# scope.  Calling the engine eagerly per chunk rebuilds the scan body
+# closure every time, and jax's eager scan cache is keyed on the
+# function object — so every chunk recompiled its scan (and a resumed
+# run recompiled them all again).  Through this single jit the driver
+# compiles at most two programs per run shape: the full-chunk program
+# and one trailing partial chunk — the budget the trace audit
+# (`repro.analysis.trace_audit`) pins.  All callables must be
+# cache-stable (module-level factories, not per-call lambdas) to hit it.
+_solve_sequence_spec_jit = jax.jit(
+    _solve_sequence_spec,
+    static_argnames=(
+        "spec",
+        "make_operator",
+        "make_preconditioner",
+        "carry_x",
+        "divergence_fallback",
+        "batch_axis",
+    ),
+)
+
+
 def _solve_sequence_chunked(
     systems: Any,
     b_seq: Pytree,
@@ -583,13 +605,15 @@ def _solve_sequence_chunked(
         restored = checkpoint.restore_latest(acc)
         if restored is not None:
             _, acc, extra = restored
+            # repro-lint: disable=host-sync-in-trace — host resume path:
+            # `extra` is the checkpoint's plain-dict metadata, never traced.
             start = int(extra["next_index"])
 
     ravel_each = jax.vmap(pt.ravel)
     while start < num_systems:
         stop = min(start + checkpoint_every, num_systems)
         sl = slice(start, stop)
-        res = _solve_sequence_spec(
+        res = _solve_sequence_spec_jit(
             jax.tree_util.tree_map(lambda l: l[sl], systems),
             jax.tree_util.tree_map(lambda l: l[sl], b_seq),
             spec,

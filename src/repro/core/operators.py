@@ -119,14 +119,52 @@ class LinearOperator:
         return cls(*aux)
 
 
-def from_matrix(mat: jnp.ndarray) -> LinearOperator:
-    """Explicit dense SPD matrix as an operator over flat ``(n,)`` vectors."""
-    n = mat.shape[0]
+@jax.tree_util.register_pytree_node_class
+class DenseMatrixOperator(LinearOperator):
+    """Dense SPD matrix as an operator — with the matrix as a pytree LEAF.
 
-    def mv(v):
-        return mat @ v
+    The base :class:`LinearOperator` flattens with zero children (its
+    closures are aux data), which is right for opaque callables but
+    wrong for an explicit matrix: aux data is part of the jit cache key,
+    so a closure-wrapped matrix retraced ``solve_jit`` for EVERY new
+    system (the trace-audit gate's retrace-budget check catches exactly
+    this).  Here the matrix is the child — two operators over same-shape
+    matrices share one trace, vmap batches over a stacked leading axis,
+    and the matrix shards like any other array.
+    """
 
-    return LinearOperator(mv, matvec_cost_flops=2.0 * n * n, matmat=mv)
+    def __init__(self, mat: jnp.ndarray):
+        self.mat = mat
+        # Unflatten may pass non-array sentinels (treedef manipulation);
+        # the matvec is never called on those, but __init__ must survive.
+        shape = getattr(mat, "shape", None)
+        n = shape[-1] if shape else 0
+
+        def mv(v):
+            return mat @ v
+
+        LinearOperator.__init__(
+            self, mv, matvec_cost_flops=2.0 * n * n, matmat=mv
+        )
+
+    def tree_flatten(self):
+        return (self.mat,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        (mat,) = children
+        return cls(mat)
+
+
+def from_matrix(mat: jnp.ndarray) -> DenseMatrixOperator:
+    """Explicit dense SPD matrix as an operator over flat ``(n,)`` vectors.
+
+    The matrix is carried as a traced pytree leaf (see
+    :class:`DenseMatrixOperator`): solves over different same-shape
+    matrices hit one compiled trace instead of retracing per system.
+    """
+    return DenseMatrixOperator(mat)
 
 
 def from_callable(fn: Matvec, cost: Optional[float] = None) -> LinearOperator:

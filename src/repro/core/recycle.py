@@ -423,6 +423,8 @@ def _one_recycled_solve(
             result.x, info, w_next, aw_next, theta, drift_next, rung0,
         )
 
+    # repro-lint: disable=host-sync-in-trace — recovery_rungs is static
+    # Python config (jit-static via SolveSpec), not traced data.
     rungs = min(int(recovery_rungs), MAX_RECOVERY_RUNGS)
     had_basis = jnp.any(w != 0)
     zero_dtype = w.dtype

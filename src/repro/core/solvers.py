@@ -555,6 +555,9 @@ def defcg(
                     return aw_flat, x_flat, r_flat, z_s, p_s, winv_s
 
                 aw_flat, x_flat, r_flat, z_flat, p_flat, waw_inv = (
+                    # repro-lint: disable=cond-batched-pred — documented
+                    # caveat (see docstring): under vmap this lowers to a
+                    # select and a batched solve pays the refresh GEMM.
                     jax.lax.cond(refresh, _refresh_setup, _keep_setup, None)
                 )
                 matvecs = matvecs + k * refresh.astype(matvecs.dtype)

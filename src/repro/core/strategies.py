@@ -101,6 +101,8 @@ def _gated_basis_apply(apply_basis, pred, w, fallback, batch_axis):
     SOME tenant's guard fired.
     """
     if batch_axis is None:
+        # repro-lint: disable=cond-batched-pred — this is the explicitly
+        # UNBATCHED branch; the vmapped path below reduces with psum.
         return jax.lax.cond(pred, apply_basis, lambda _: fallback, w)
     any_pred = jax.lax.psum(pred.astype(jnp.int32), batch_axis) > 0
     out = jax.lax.cond(any_pred, apply_basis, lambda _: fallback, w)

@@ -1,0 +1,559 @@
+"""Self-check for the static analyzer: every rule has fixture snippets
+covering the positive, suppressed, and (where applicable) allowlisted
+cases, plus engine-level suppression/baseline mechanics.
+
+The fixtures are tiny synthetic trees written under ``tmp_path`` with
+the directory names the rules key on (``core/``, ``kernels/``), so the
+tests exercise the same path-scoping logic the real ``src/`` scan uses.
+Non-slow tier: pure AST work, no jax imports in the hot path.
+"""
+
+import json
+import textwrap
+
+import pytest
+
+from repro.analysis import (
+    LintConfig,
+    RULE_NAMES,
+    load_baseline,
+    run_lint,
+    write_baseline,
+)
+from repro.analysis.engine import parse_suppressions
+
+
+def _lint_snippet(tmp_path, relpath, code, config=None):
+    """Write ``code`` at ``tmp_path/relpath`` and lint the whole tree."""
+    target = tmp_path / relpath
+    target.parent.mkdir(parents=True, exist_ok=True)
+    target.write_text(textwrap.dedent(code))
+    return run_lint([str(tmp_path)], config=config)
+
+
+def _rules_hit(result):
+    return sorted({v.rule for v in result.violations})
+
+
+# ---------------------------------------------------------------------------
+# host-sync-in-trace
+# ---------------------------------------------------------------------------
+
+
+class TestHostSyncInTrace:
+    POSITIVE = """
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def traced(x):
+            n = int(x)            # host sync on traced data
+            y = np.abs(x)         # host numpy in traced code
+            z = x.item()          # device->host transfer
+            return n + y + z
+    """
+
+    def test_positive(self, tmp_path):
+        result = _lint_snippet(tmp_path, "core/mod.py", self.POSITIVE)
+        rules = [v.rule for v in result.violations]
+        assert rules.count("host-sync-in-trace") == 3
+
+    def test_transitive_reachability(self, tmp_path):
+        # int() lives in a helper that a scanned function calls: still hit.
+        result = _lint_snippet(tmp_path, "core/mod.py", """
+            import jax
+
+            def helper(x):
+                return int(x)
+
+            def step(c, x):
+                return c + helper(x), c
+
+            def run(xs):
+                return jax.lax.scan(step, 0.0, xs)
+        """)
+        assert _rules_hit(result) == ["host-sync-in-trace"]
+
+    def test_suppressed(self, tmp_path):
+        result = _lint_snippet(tmp_path, "core/mod.py", """
+            import jax
+
+            @jax.jit
+            def traced(x, k):
+                # repro-lint: disable=host-sync-in-trace — k is static config
+                n = int(k)
+                return x * n
+        """)
+        assert result.violations == []
+        assert result.suppressed == 1
+
+    def test_multiline_justification_suppresses(self, tmp_path):
+        result = _lint_snippet(tmp_path, "core/mod.py", """
+            import jax
+
+            @jax.jit
+            def traced(x, k):
+                # repro-lint: disable=host-sync-in-trace — k is static
+                # config threaded from the spec, never traced data.
+                n = int(k)
+                return x * n
+        """)
+        assert result.violations == []
+        assert result.suppressed == 1
+
+    def test_allowlisted_file(self, tmp_path):
+        # faults.py is genuinely host-side (io_callback instrumentation).
+        result = _lint_snippet(tmp_path, "core/faults.py", self.POSITIVE)
+        assert result.violations == []
+        assert result.suppressed == 0
+
+    def test_untraced_function_not_flagged(self, tmp_path):
+        result = _lint_snippet(tmp_path, "core/mod.py", """
+            def host_only(x):
+                return int(x)
+        """)
+        assert result.violations == []
+
+    def test_static_shape_casts_not_flagged(self, tmp_path):
+        result = _lint_snippet(tmp_path, "core/mod.py", """
+            import jax
+
+            @jax.jit
+            def traced(x):
+                n = int(x.shape[0])
+                m = int(len(x.shape))
+                return x * (n + m)
+        """)
+        assert result.violations == []
+
+    def test_outside_traced_packages_not_flagged(self, tmp_path):
+        result = _lint_snippet(tmp_path, "bench/mod.py", self.POSITIVE)
+        assert result.violations == []
+
+
+# ---------------------------------------------------------------------------
+# kernel-contract
+# ---------------------------------------------------------------------------
+
+
+class TestKernelContract:
+    REF = """
+        def good_op(x):
+            return x
+    """
+    TESTS = """
+        def test_good_op_parity():
+            assert good_op is not None
+    """
+
+    def _tree(self, tmp_path, ops_code):
+        (tmp_path / "kernels").mkdir(parents=True, exist_ok=True)
+        (tmp_path / "kernels" / "ref.py").write_text(
+            textwrap.dedent(self.REF))
+        (tmp_path / "tests").mkdir(exist_ok=True)
+        (tmp_path / "tests" / "test_parity.py").write_text(
+            textwrap.dedent(self.TESTS))
+        return _lint_snippet(tmp_path, "kernels/ops.py", ops_code)
+
+    def test_compliant_op_passes(self, tmp_path):
+        result = self._tree(tmp_path, """
+            from repro.kernels import ref
+
+            def good_op(x, *, impl="auto"):
+                if impl == "pallas":
+                    return x
+                if impl == "interpret":
+                    return x
+                if impl == "chunked":
+                    return x
+                if impl == "reference":
+                    return ref.good_op(x)
+                return ref.good_op(x)
+        """)
+        assert result.violations == []
+
+    def test_missing_impl_and_oracle_and_test(self, tmp_path):
+        result = self._tree(tmp_path, """
+            def bad_op(x, *, impl="auto"):
+                if impl == "pallas":
+                    return x
+                return x
+        """)
+        msgs = [v.message for v in result.violations]
+        assert all(v.rule == "kernel-contract" for v in result.violations)
+        assert any("does not dispatch" in m for m in msgs)  # impls missing
+        assert any("never references" in m for m in msgs)  # no oracle
+        assert any("no parity test" in m for m in msgs)  # not in tests/
+
+    def test_oracle_must_exist_in_ref(self, tmp_path):
+        result = self._tree(tmp_path, """
+            from repro.kernels import ref
+
+            def good_op(x, *, impl="auto"):
+                for impl in ("pallas", "interpret", "reference", "chunked"):
+                    pass
+                return ref.phantom_op(x)
+        """)
+        assert any(
+            "not defined in ref.py" in v.message for v in result.violations
+        )
+
+    def test_non_contract_function_ignored(self, tmp_path):
+        # No `impl` kwarg (e.g. decode steps) and private helpers: exempt.
+        result = self._tree(tmp_path, """
+            def decode_step(x):
+                return x
+
+            def _helper(x, *, impl="auto"):
+                return x
+        """)
+        assert result.violations == []
+
+
+# ---------------------------------------------------------------------------
+# pytree-schema (AST half)
+# ---------------------------------------------------------------------------
+
+
+class TestPytreeSchema:
+    def test_missing_unflatten(self, tmp_path):
+        result = _lint_snippet(tmp_path, "core/mod.py", """
+            import jax
+
+            @jax.tree_util.register_pytree_node_class
+            class Broken:
+                def tree_flatten(self):
+                    return (), None
+        """)
+        assert _rules_hit(result) == ["pytree-schema"]
+        assert "tree_unflatten" in result.violations[0].message
+
+    def test_dynamic_key_name(self, tmp_path):
+        result = _lint_snippet(tmp_path, "core/mod.py", """
+            import jax
+            from jax.tree_util import GetAttrKey
+
+            @jax.tree_util.register_pytree_with_keys_class
+            class Shifty:
+                def tree_flatten_with_keys(self):
+                    name = "W" + "x"
+                    return [(GetAttrKey(name), 1)], None
+
+                @classmethod
+                def tree_unflatten(cls, aux, children):
+                    return cls()
+        """)
+        assert _rules_hit(result) == ["pytree-schema"]
+        assert "non-literal" in result.violations[0].message
+
+    def test_good_registration_passes(self, tmp_path):
+        result = _lint_snippet(tmp_path, "core/mod.py", """
+            import jax
+            from jax.tree_util import GetAttrKey
+
+            @jax.tree_util.register_pytree_with_keys_class
+            class Stable:
+                def tree_flatten_with_keys(self):
+                    return [(GetAttrKey("W"), 1)], None
+
+                @classmethod
+                def tree_unflatten(cls, aux, children):
+                    return cls()
+        """)
+        assert result.violations == []
+
+
+# ---------------------------------------------------------------------------
+# static-spec-frozen
+# ---------------------------------------------------------------------------
+
+
+class TestStaticSpecFrozen:
+    def test_unfrozen_spec(self, tmp_path):
+        result = _lint_snippet(tmp_path, "core/mod.py", """
+            import dataclasses
+
+            @dataclasses.dataclass
+            class TunerSpec:
+                k: int = 8
+        """)
+        assert _rules_hit(result) == ["static-spec-frozen"]
+
+    def test_array_leaf_in_spec(self, tmp_path):
+        result = _lint_snippet(tmp_path, "core/mod.py", """
+            import dataclasses
+            import jax.numpy as jnp
+
+            @dataclasses.dataclass(frozen=True)
+            class SketchSpec:
+                k: int = 8
+                weights: jnp.ndarray = None
+        """)
+        assert _rules_hit(result) == ["static-spec-frozen"]
+        assert "leaf-less" in result.violations[0].message
+
+    def test_frozen_scalar_spec_passes(self, tmp_path):
+        result = _lint_snippet(tmp_path, "core/mod.py", """
+            import dataclasses
+
+            @dataclasses.dataclass(frozen=True)
+            class CleanSpec:
+                k: int = 8
+                tol: float = 1e-5
+        """)
+        assert result.violations == []
+
+    def test_non_spec_dataclass_ignored(self, tmp_path):
+        result = _lint_snippet(tmp_path, "core/mod.py", """
+            import dataclasses
+
+            @dataclasses.dataclass
+            class MutableScratch:
+                count: int = 0
+        """)
+        assert result.violations == []
+
+
+# ---------------------------------------------------------------------------
+# cond-batched-pred
+# ---------------------------------------------------------------------------
+
+
+class TestCondBatchedPred:
+    def test_unreduced_pred(self, tmp_path):
+        result = _lint_snippet(tmp_path, "core/mod.py", """
+            import jax
+
+            def gate(pred, x):
+                return jax.lax.cond(pred, lambda v: v, lambda v: -v, x)
+        """)
+        assert _rules_hit(result) == ["cond-batched-pred"]
+
+    def test_psum_reduced_pred_passes(self, tmp_path):
+        result = _lint_snippet(tmp_path, "core/mod.py", """
+            import jax
+            import jax.numpy as jnp
+
+            def gate(pred, x, axis):
+                any_pred = jax.lax.psum(pred.astype(jnp.int32), axis) > 0
+                return jax.lax.cond(any_pred, lambda v: v, lambda v: -v, x)
+        """)
+        assert result.violations == []
+
+    def test_chained_assignment_reduction_passes(self, tmp_path):
+        # The reduction is two assignments upstream of the predicate.
+        result = _lint_snippet(tmp_path, "core/mod.py", """
+            import jax
+            import jax.numpy as jnp
+
+            def gate(active, x, axis):
+                total = jax.lax.psum(active.astype(jnp.int32), axis)
+                run = total > 0
+                return jax.lax.cond(run, lambda v: v, lambda v: -v, x)
+        """)
+        assert result.violations == []
+
+    def test_suppressed(self, tmp_path):
+        result = _lint_snippet(tmp_path, "core/mod.py", """
+            import jax
+
+            def gate(pred, x):
+                # repro-lint: disable=cond-batched-pred — never vmapped
+                return jax.lax.cond(pred, lambda v: v, lambda v: -v, x)
+        """)
+        assert result.violations == []
+        assert result.suppressed == 1
+
+
+# ---------------------------------------------------------------------------
+# bare-except / swallowed-thread-exc
+# ---------------------------------------------------------------------------
+
+
+class TestExceptionRules:
+    def test_bare_except(self, tmp_path):
+        result = _lint_snippet(tmp_path, "util/mod.py", """
+            def f():
+                try:
+                    g()
+                except:
+                    pass
+        """)
+        assert "bare-except" in _rules_hit(result)
+
+    def test_typed_except_passes(self, tmp_path):
+        result = _lint_snippet(tmp_path, "util/mod.py", """
+            def f():
+                try:
+                    g()
+                except ValueError:
+                    raise
+        """)
+        assert result.violations == []
+
+    def test_swallowed_thread_exc(self, tmp_path):
+        result = _lint_snippet(tmp_path, "util/mod.py", """
+            import threading
+
+            def spawn():
+                def work():
+                    try:
+                        risky()
+                    except Exception:
+                        pass
+                t = threading.Thread(target=work, daemon=True)
+                t.start()
+        """)
+        assert "swallowed-thread-exc" in _rules_hit(result)
+
+    def test_stored_exception_passes(self, tmp_path):
+        # The checkpoint-manager idiom: stash for the joiner to re-raise.
+        result = _lint_snippet(tmp_path, "util/mod.py", """
+            import threading
+
+            class Saver:
+                def spawn(self):
+                    def work():
+                        try:
+                            risky()
+                        except BaseException as exc:
+                            self._async_error = exc
+                    self._thread = threading.Thread(target=work)
+                    self._thread.start()
+        """)
+        assert result.violations == []
+
+
+# ---------------------------------------------------------------------------
+# engine mechanics: suppressions, baseline, fingerprints
+# ---------------------------------------------------------------------------
+
+
+class TestEngine:
+    def test_every_rule_name_is_documented(self):
+        # The catalogue the fixtures above cover, pinned so a new rule
+        # without fixture coverage fails here first.
+        assert RULE_NAMES == [
+            "host-sync-in-trace",
+            "kernel-contract",
+            "pytree-schema",
+            "static-spec-frozen",
+            "cond-batched-pred",
+            "bare-except",
+            "swallowed-thread-exc",
+        ]
+
+    def test_disable_file(self, tmp_path):
+        result = _lint_snippet(tmp_path, "core/mod.py", """
+            # repro-lint: disable-file=host-sync-in-trace — eager debug module
+            import jax
+
+            @jax.jit
+            def traced(x):
+                return int(x)
+        """)
+        assert result.violations == []
+        assert result.suppressed == 1
+
+    def test_unrelated_rule_not_suppressed(self, tmp_path):
+        result = _lint_snippet(tmp_path, "core/mod.py", """
+            import jax
+
+            @jax.jit
+            def traced(x):
+                # repro-lint: disable=bare-except — wrong rule name
+                return int(x)
+        """)
+        assert _rules_hit(result) == ["host-sync-in-trace"]
+
+    def test_baseline_grandfathers_by_content(self, tmp_path):
+        code = """
+            import jax
+
+            @jax.jit
+            def traced(x):
+                return int(x)
+        """
+        result = _lint_snippet(tmp_path, "core/mod.py", code)
+        assert len(result.violations) == 1
+        bl_path = tmp_path / "baseline.json"
+        write_baseline(str(bl_path), result.violations)
+        baseline = load_baseline(str(bl_path))
+
+        # Same finding, shifted by unrelated edits above: still baselined.
+        shifted = "# a new comment line\n# another\n" + textwrap.dedent(code)
+        (tmp_path / "core" / "mod.py").write_text(shifted)
+        result2 = run_lint([str(tmp_path)], baseline=baseline)
+        assert result2.violations == []
+        assert len(result2.baselined) == 1
+
+    def test_baseline_does_not_hide_new_findings(self, tmp_path):
+        result = _lint_snippet(tmp_path, "core/mod.py", """
+            import jax
+
+            @jax.jit
+            def traced(x):
+                return int(x)
+        """)
+        bl_path = tmp_path / "baseline.json"
+        write_baseline(str(bl_path), result.violations)
+        baseline = load_baseline(str(bl_path))
+        (tmp_path / "core" / "mod.py").write_text(textwrap.dedent("""
+            import jax
+
+            @jax.jit
+            def traced(x):
+                return int(x)
+
+            @jax.jit
+            def traced2(y):
+                return float(y)
+        """))
+        result2 = run_lint([str(tmp_path)], baseline=baseline)
+        assert len(result2.baselined) == 1  # the int() finding
+        assert len(result2.violations) == 1  # the new float() finding
+
+    def test_parse_error_is_a_violation(self, tmp_path):
+        result = _lint_snippet(tmp_path, "core/mod.py", "def broken(:\n")
+        assert [v.rule for v in result.violations] == ["parse-error"]
+
+    def test_suppression_parser(self):
+        sup = parse_suppressions(
+            "x = 1\n"
+            "# repro-lint: disable=rule-a, rule-b — because reasons\n"
+            "y = 2\n"
+        )
+        assert sup.matches("rule-a", 2)
+        assert sup.matches("rule-b", 3)  # line after the directive
+        assert not sup.matches("rule-c", 3)
+        assert not sup.matches("rule-a", 1)
+
+
+# ---------------------------------------------------------------------------
+# the shipped tree is clean
+# ---------------------------------------------------------------------------
+
+
+def test_shipped_src_tree_is_clean():
+    """`python -m repro.analysis src/` exits 0 on the repo as shipped —
+    every finding fixed or suppressed with a justification."""
+    import pathlib
+
+    src = pathlib.Path(__file__).resolve().parent.parent / "src"
+    result = run_lint([str(src)])
+    assert result.violations == [], "\n".join(
+        v.format() for v in result.violations
+    )
+
+
+def test_baseline_file_parses_if_present():
+    import pathlib
+
+    bl = (
+        pathlib.Path(__file__).resolve().parent.parent
+        / "analysis" / "baseline.json"
+    )
+    if not bl.exists():
+        pytest.skip("no baseline file (clean tree)")
+    data = json.loads(bl.read_text())
+    assert isinstance(data.get("violations"), list)

@@ -35,6 +35,7 @@ EXPECTED_CORE_ALL = sorted(
         # operators
         "GGNOperator",
         "KernelSystemOperator",
+        "DenseMatrixOperator",
         "LinearOperator",
         "apply_to_basis",
         "from_callable",

@@ -1,0 +1,151 @@
+"""Compile-budget regression tests: spec-identical repeat calls must hit
+the jit cache.
+
+These pin the two retrace bugs the trace audit caught when it first ran
+over the repo (and the PR 6 chunked-sequence claim):
+
+* ``from_matrix`` used to wrap the matrix in a closure stored as pytree
+  AUX data — part of the static jit cache key — so ``solve_jit``
+  retraced for every new system.  ``DenseMatrixOperator`` carries the
+  matrix as a traced leaf; the budget here is ≤1 trace across systems.
+* The chunked (crash-resumable) ``solve_sequence`` ran its engine scan
+  eagerly per chunk; jax's eager-scan cache keys on the body function
+  OBJECT, and the body was rebuilt per call, so every chunk (and every
+  resumed run) recompiled.  Through the module-level
+  ``_solve_sequence_spec_jit`` the budget is ≤2 programs per run shape
+  (full chunk + trailing partial) and 0 recompilations on an identical
+  re-run.
+
+Budgets are measured on FRESH ``jax.jit`` wrappers via ``_cache_size()``
+(so other tests' caches can't mask a regression) and, for the chunked
+host loop, by capturing ``jax.log_compiles()`` events.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import trace_audit
+from repro.checkpoint import CheckpointManager
+from repro.core import RecycleState, SolveSpec, from_matrix
+from repro.core import api as api_mod
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+def _problem(num=5, n=24, seed=0):
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(key, (n, n)) / jnp.sqrt(n)
+    base = q @ q.T + jnp.eye(n)
+    shifts = 0.05 * jnp.arange(num, dtype=base.dtype)
+    mats = base[None] + shifts[:, None, None] * jnp.eye(n)[None]
+    bs = jax.random.normal(jax.random.fold_in(key, 1), (num, n))
+    return mats, bs
+
+
+SPEC = SolveSpec(k=3, ell=4, tol=1e-6, maxiter=40)
+
+
+class TestSingleSolveBudget:
+    def test_solve_retraces_at_most_once_across_systems(self):
+        mats, bs = _problem()
+        state = RecycleState.zeros(SPEC.k, bs.shape[-1], bs.dtype)
+        f = trace_audit.fresh_jit(
+            api_mod.solve,
+            static_argnames=("spec", "record_residuals", "batch_axis"),
+        )
+        for i in range(3):
+            res = f(from_matrix(mats[i]), bs[i], SPEC, state)
+            state = res.state
+        assert f._cache_size() == 1
+
+    def test_dense_operator_matrix_is_a_leaf(self):
+        # The root cause of the old per-system retrace: the matrix must
+        # be traced pytree data, not static aux.
+        op = from_matrix(jnp.eye(4))
+        leaves = jax.tree_util.tree_leaves(op)
+        assert len(leaves) == 1 and leaves[0].shape == (4, 4)
+
+    def test_distinct_specs_do_retrace(self):
+        # Sanity for the measurement itself: the cache key DOES see spec.
+        mats, bs = _problem()
+        state = RecycleState.zeros(3, bs.shape[-1], bs.dtype)
+        f = trace_audit.fresh_jit(
+            api_mod.solve,
+            static_argnames=("spec", "record_residuals", "batch_axis"),
+        )
+        f(from_matrix(mats[0]), bs[0], SPEC, state)
+        f(from_matrix(mats[0]), bs[0],
+          SolveSpec(k=3, ell=4, tol=1e-6, maxiter=41), state)
+        assert f._cache_size() == 2
+
+
+class TestSequenceAndBatchBudget:
+    def test_solve_sequence_retraces_at_most_once(self):
+        mats, bs = _problem()
+        state = RecycleState.zeros(SPEC.k, bs.shape[-1], bs.dtype)
+        f = jax.jit(
+            lambda ms, vs, st: api_mod.solve_sequence(
+                ms, vs, SPEC, st, make_operator=from_matrix
+            )
+        )
+        r1 = f(mats, bs, state)
+        f(mats + 0.01, bs + 1.0, r1.state)
+        assert f._cache_size() == 1
+
+    def test_solve_batch_retraces_at_most_once(self):
+        mats, bs = _problem()
+        state = RecycleState.zeros(SPEC.k, bs.shape[-1], bs.dtype)
+        bstate = jax.tree_util.tree_map(lambda l: jnp.stack([l, l]), state)
+        f = trace_audit.fresh_jit(
+            api_mod.solve_batch,
+            static_argnames=(
+                "spec", "make_operator", "make_preconditioner",
+                "sequence", "carry_x",
+            ),
+        )
+        f(mats[:2], bs[:2], SPEC, bstate, make_operator=from_matrix)
+        f(mats[1:3], bs[1:3], SPEC, bstate, make_operator=from_matrix)
+        assert f._cache_size() == 1
+
+
+class TestChunkedSequenceBudget:
+    def _run(self, directory, mats, bs):
+        return api_mod.solve_sequence(
+            mats, bs, SPEC, None,
+            make_operator=from_matrix,
+            checkpoint=CheckpointManager(directory),
+            checkpoint_every=2,
+        )
+
+    def test_chunked_compiles_at_most_two_programs(self, tmp_path):
+        # N=5, chunk=2 → chunks of 2, 2, 1: the full-chunk program plus
+        # one trailing partial — never one program per chunk.
+        mats, bs = _problem(num=5, n=20, seed=3)
+        with trace_audit.count_compiles() as cap:
+            self._run(str(tmp_path / "a"), mats, bs)
+        chunk_programs = [
+            n for n in cap.names if n == "scan" or "solve_sequence" in n
+        ]
+        assert len(chunk_programs) <= 2, cap.names
+
+        # A spec/shape-identical re-run recompiles NOTHING (the PR 6
+        # resume story: a crash-resumed run must not pay compiles again).
+        with trace_audit.count_compiles() as cap2:
+            self._run(str(tmp_path / "b"), mats, bs)
+        assert cap2.names == [], cap2.names
+
+
+class TestAuditEntryPoints:
+    """The executable audits themselves stay green (what CI's lint tier
+    runs); failures here reproduce with
+    `python -m repro.analysis --trace-audit`."""
+
+    def test_retrace_budget_audit_clean(self):
+        assert trace_audit.audit_retrace_budgets() == []
+
+    def test_forbidden_primitive_audit_clean(self):
+        assert trace_audit.audit_forbidden_primitives() == []
+
+    def test_chunked_audit_clean(self):
+        assert trace_audit.audit_chunked_sequence() == []

@@ -1,0 +1,106 @@
+"""Snapshot test for the checked-in leaf/field schema manifest.
+
+The PR 4 incident: renaming a ``RecycleState`` leaf silently orphaned
+every existing checkpoint, because ``restore_pytree`` matches leaves BY
+NAME.  The manifest (``src/repro/analysis/schema_manifest.json``) pins
+the names; this test pins the manifest.  If it fails you changed a
+checkpoint/jit contract — bump ``SCHEMA_VERSION`` in
+``repro/checkpoint/manager.py``, add a restore migration, and regenerate
+with ``python -m repro.analysis --update-schema``.
+"""
+
+import json
+
+import pytest
+
+from repro.analysis import schema
+from repro.core import RecycleState, SolveReport, SolveSpec
+
+
+class TestManifestMatchesLiveCode:
+    def test_checked_in_manifest_matches(self):
+        violations = schema.check_manifest()
+        assert violations == [], "\n".join(v.message for v in violations)
+
+    def test_recycle_state_leaf_names_snapshot(self):
+        live = schema.compute_manifest()
+        assert [l["key"] for l in live["RecycleState"]["leaves"]] == [
+            "W", "AW", "theta", "systems_solved", "drift",
+        ]
+
+    def test_solve_report_field_order_snapshot(self):
+        assert SolveReport._fields == (
+            "status", "rung", "guard_firings", "matvecs",
+        )
+
+    def test_solve_spec_field_names_snapshot(self):
+        live = schema.compute_manifest()
+        assert [f["name"] for f in live["SolveSpec"]["fields"]] == [
+            "method", "k", "ell", "tol", "atol", "maxiter", "select",
+            "waw_jitter", "refresh_aw", "precond", "precond_rank",
+            "precond_sigma", "strategy", "recovery_rungs",
+            "recovery_shift", "stagnation_window",
+        ]
+
+    def test_manifest_version_matches_checkpoint_manager(self):
+        from repro.checkpoint import manager
+
+        with open(schema.default_manifest_path()) as f:
+            stored = json.load(f)
+        assert stored["checkpoint_schema_version"] == manager.SCHEMA_VERSION
+
+
+class TestManifestCatchesDrift:
+    def test_leaf_rename_is_detected(self, tmp_path):
+        # Simulate the PR 4 break: the manifest remembers leaf `W` under
+        # another name → check_manifest must flag it.
+        stored = schema.compute_manifest()
+        stored["RecycleState"]["leaves"][0]["key"] = "basis"
+        p = tmp_path / "schema_manifest.json"
+        p.write_text(json.dumps(stored))
+        violations = schema.check_manifest(str(p))
+        assert any("RecycleState.leaves" in v.message for v in violations)
+        assert any("SCHEMA_VERSION" in v.message for v in violations)
+
+    def test_spec_default_drift_is_detected(self, tmp_path):
+        stored = schema.compute_manifest()
+        for f in stored["SolveSpec"]["fields"]:
+            if f["name"] == "tol":
+                f["default"] = "0.001"
+        p = tmp_path / "schema_manifest.json"
+        p.write_text(json.dumps(stored))
+        violations = schema.check_manifest(str(p))
+        assert any("SolveSpec.fields" in v.message for v in violations)
+
+    def test_missing_manifest_is_flagged(self, tmp_path):
+        violations = schema.check_manifest(str(tmp_path / "nope.json"))
+        assert len(violations) == 1
+        assert "--update-schema" in violations[0].message
+
+    def test_roundtrip_regeneration_is_stable(self, tmp_path):
+        p = tmp_path / "schema_manifest.json"
+        schema.write_manifest(str(p))
+        assert schema.check_manifest(str(p)) == []
+
+
+def test_state_template_roundtrips_by_name():
+    """End-to-end: the manifest's leaf names are the names the
+    checkpoint layer actually restores by."""
+    import jax
+
+    state = RecycleState.zeros(2, 4)
+    leaves, _ = jax.tree_util.tree_flatten_with_path(state)
+    names = {
+        getattr(path[0], "name", None) for path, _ in leaves
+    }
+    assert names == {"W", "AW", "theta", "systems_solved", "drift"}
+
+
+def test_spec_is_hashable_static_arg():
+    # The manifest documents SolveSpec as the static jit cache key; it
+    # must therefore stay hashable and equality-stable.
+    assert hash(SolveSpec()) == hash(SolveSpec())
+    assert SolveSpec() == SolveSpec()
+    with pytest.raises(Exception):
+        object.__setattr__  # appease linters: attribute write below
+        SolveSpec().__setattr__("k", 9)
