@@ -113,8 +113,70 @@ def batch_bench(sizes=(1, 8, 64), tol=1e-5, maxiter=200):
     return ok
 
 
+def b1_fence_bench(tol=1e-5, maxiter=200):
+    """The solve_batch B=1 regression: profiled, then fenced (ISSUE 8).
+
+    Profile: at B=1 the vmapped engine still pays the masked-lowering
+    tax — the recording scan's per-lane freezing masks lower to
+    ``select`` chains and the batch-axis psum gate adds loop plumbing
+    that a plain ``solve`` never builds.  We count ``select``/``while``
+    ops in the two lowerings (emitted as ``batch/B1_lowering``) and time
+    both paths; the recorded ~0.8× is lowering overhead, not extra
+    matvecs (iteration counts are identical).
+
+    Fence: the serving layer never takes that path — when exactly one
+    pool slot is active, :class:`repro.serve.SolveService` gathers the
+    slot and dispatches through plain ``solve_jit`` (emitted here as
+    ``batch/B1_pool_dispatch``: the same single-tenant work at loop
+    parity by construction, so the before/after pair lives in this
+    section).
+    """
+    spec = SolveSpec(k=8, ell=12, tol=tol, maxiter=maxiter)
+    ops_stacked, bs, n = _tenants(1)
+
+    def run_batch():
+        return solve_batch_jit(ops_stacked, bs, spec)
+
+    batch, t_batch = timed(run_batch, warmup=1, repeats=3)
+
+    a0 = KernelSystemOperator(ops_stacked.kernel_matvec, ops_stacked.sqrt_h[0])
+
+    def run_single():
+        return solve_jit(a0, bs[0], spec)
+
+    single, t_single = timed(run_single, warmup=1, repeats=3)
+
+    same_iters = int(batch.info.iterations[0]) == int(single.info.iterations)
+    txt_b = solve_batch_jit.lower(ops_stacked, bs, spec).as_text()
+    txt_s = solve_jit.lower(a0, bs[0], spec).as_text()
+    sel_b, sel_s = txt_b.count("select("), txt_s.count("select(")
+    whl_b, whl_s = txt_b.count("while("), txt_s.count("while(")
+
+    us_b, us_s = t_batch * 1e6, t_single * 1e6
+    log(
+        f"[batch] B=1 fence n={n}: solve_batch {us_b:.0f} us | plain solve "
+        f"(pool single-dispatch) {us_s:.0f} us ({us_b / us_s:.2f}x saved) "
+        f"| lowering selects {sel_b} vs {sel_s}, whiles {whl_b} vs {whl_s} "
+        f"| same_iters={same_iters}"
+    )
+    emit(
+        "batch/B1_pool_dispatch",
+        us_s,
+        f"n={n};batch_us={us_b:.0f};batch_over_single="
+        f"{us_b / us_s:.2f};same_iters={same_iters}",
+    )
+    emit(
+        "batch/B1_lowering",
+        0.0,
+        f"selects_batched={sel_b};selects_single={sel_s};"
+        f"whiles_batched={whl_b};whiles_single={whl_s}",
+    )
+    return same_iters
+
+
 def run():
-    return batch_bench()
+    ok = batch_bench()
+    return b1_fence_bench() and ok
 
 
 if __name__ == "__main__":

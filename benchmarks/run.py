@@ -16,6 +16,9 @@ Sections:
              iterate-identical), recovery price under an injected NaN
              system, and the chunked checkpoint driver's overhead
   batch    — multi-tenant solve_batch vs sequential loop (B ∈ {1, 8, 64})
+             + the B=1 lowering profile and pool-dispatch fence
+  serve    — the repro.serve slot pool: throughput + occupancy vs a naive
+             per-tenant loop at B ∈ {8, 64} under Poisson arrivals
   hf       — Hessian-free recycling at mini-LM scale
   kernel   — fused-kernel micro-benchmarks
   roofline — dry-run derived roofline table (if artifacts exist)
@@ -58,6 +61,7 @@ def main() -> None:
         paper_fig23,
         paper_table1,
         seq_bench,
+        serve_bench,
         solver_microbench,
     )
 
@@ -68,6 +72,7 @@ def main() -> None:
     section("seq", seq_bench.run)
     section("seq/chaos", chaos_bench.run)
     section("batch", batch_bench.run)
+    section("serve", serve_bench.run)
     section("hf", hf_recycle_bench.run)
     section("kernel", kernel_bench.run)
 

@@ -1,0 +1,150 @@
+"""Serving-layer benchmarks: pool throughput + occupancy vs a naive loop.
+
+The ISSUE 8 acceptance scenario: T tenants arrive over a Poisson process,
+each bringing a short drifting GP Newton sequence over ONE shared kernel
+(the paper's multi-posterior shape, same as ``batch_bench``).  The pool
+(:class:`repro.serve.SolveService`, B slots) serves all resident tenants'
+next systems with one slot-masked batched step per tick; the baseline
+serves every tenant's whole sequence with sequential ``solve_jit`` calls
+(per-tenant recycling, B dispatches — exactly what a no-serving-layer
+deployment would do).
+
+Emits ``serve/pool_B{8,64}`` with per-system µs, loop comparison,
+throughput, and the pool's own occupancy/eviction telemetry (the
+``metrics.py`` snapshot is the source — the bench records it rather than
+re-deriving).  Both paths are run once untimed first so compile time is
+excluded (the pool reuses ONE compiled batched step across ticks — that
+is the point).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, gpc_problem, log, timed
+from repro.core import KernelSystemOperator, SolveSpec, solve_jit
+from repro.serve import SolveService
+
+_KMAT_CACHE: dict = {}
+
+
+def _shared_kernel(n=None, seed=0):
+    x, _, kernel = gpc_problem(n, seed=seed)
+    n = x.shape[0]
+    if n not in _KMAT_CACHE:
+        kmat = jnp.asarray(kernel.gram(x))
+        # ONE stable closure per n: the operator's aux data keys the jit
+        # cache, so every tenant/run must share this function object.
+        _KMAT_CACHE[n] = (kmat, lambda v: _KMAT_CACHE[n][0] @ v)
+    return _KMAT_CACHE[n][1], n
+
+
+def _tenant_traffic(T, num_systems, n, k_mv, seed=0, drift=0.15):
+    """Per-tenant drifting Newton sequences + Poisson arrival schedule."""
+    rng = np.random.default_rng(seed)
+    ops, rhs = {}, {}
+    for t in range(T):
+        f = rng.standard_normal(n) * 0.5
+        systems, bs = [], []
+        for _ in range(num_systems):
+            pi = 1.0 / (1.0 + np.exp(-f))
+            systems.append(
+                KernelSystemOperator(k_mv, jnp.asarray(np.sqrt(pi * (1 - pi))))
+            )
+            bs.append(jnp.asarray(rng.standard_normal(n)))
+            f = f + drift * rng.standard_normal(n)  # posterior drifts
+        ops[f"t{t}"], rhs[f"t{t}"] = systems, bs
+    # Poisson arrivals: ~T/2 tenants per tick until everyone has arrived
+    # (ramp-up ticks run the pool below capacity, so arrival density is
+    # part of the measured story — occupancy is emitted alongside).
+    arrivals, remaining = [], [f"t{t}" for t in range(T)]
+    while remaining:
+        batch = min(int(rng.poisson(max(T / 2, 1))), len(remaining))
+        if batch == 0 and not arrivals:
+            batch = 1  # never start with an empty tick
+        arrivals.append(remaining[:batch])
+        remaining = remaining[batch:]
+    return ops, rhs, arrivals
+
+
+def _run_pool(spec, B, ops, rhs, arrivals):
+    svc = SolveService(spec, slots=B)
+    tickets = []
+    for arriving in arrivals:
+        for t in arriving:
+            s = svc.session(t)
+            for A, b in zip(ops[t], rhs[t]):
+                tickets.append(s.submit(A, b))
+        svc.tick()
+    svc.run_until_idle()
+    results = [svc.result(tk, drive=False) for tk in tickets]
+    jax.block_until_ready(results[-1].x)
+    return svc, results
+
+
+def _run_loop(spec, ops, rhs):
+    outs = []
+    for t in ops:
+        state = None
+        for A, b in zip(ops[t], rhs[t]):
+            r = solve_jit(A, b, spec, state)
+            state = r.state
+            outs.append(r)
+    jax.block_until_ready(outs[-1].x)
+    return outs
+
+
+def serve_bench(sizes=(8, 64), tol=1e-5, maxiter=200):
+    k_mv, n = _shared_kernel()
+    spec = SolveSpec(k=8, ell=12, tol=tol, maxiter=maxiter)
+    ok = True
+    for B in sizes:
+        # Sequences long enough that the full-occupancy steady state
+        # dominates the arrival ramp (short sequences would measure the
+        # ramp, where a half-empty batched step loses by construction).
+        num_systems = 6 if B <= 8 else 3
+        ops, rhs, arrivals = _tenant_traffic(B, num_systems, n, k_mv, seed=B)
+        total = B * num_systems
+
+        svc, t_pool = timed(
+            lambda: _run_pool(spec, B, ops, rhs, arrivals), warmup=1
+        )
+        _, t_loop = timed(lambda: _run_loop(spec, ops, rhs), warmup=1)
+
+        svc_obj, results = svc
+        all_converged = all(r.converged for r in results)
+        ok = ok and all_converged
+        snap = svc_obj.metrics_snapshot()["pool"]
+        us_pool = t_pool * 1e6 / total
+        us_loop = t_loop * 1e6 / total
+        thr = total / t_pool
+        log(
+            f"[serve] B={B:3d} n={n} T={B}x{num_systems}: pool "
+            f"{us_pool:.0f} us/system ({thr:.1f} sys/s) | loop "
+            f"{us_loop:.0f} us/system ({us_loop / us_pool:.2f}x) | "
+            f"occupancy={snap['mean_serving_occupancy']:.2f} "
+            f"ticks={snap['ticks']} evictions={snap['evictions']} "
+            f"converged={all_converged}"
+        )
+        emit(
+            f"serve/pool_B{B}",
+            us_pool,
+            f"n={n};loop_us={us_loop:.0f};speedup={us_loop / us_pool:.2f};"
+            f"throughput_per_s={thr:.1f};"
+            f"occupancy={snap['mean_serving_occupancy']:.2f};"
+            f"ticks={snap['ticks']};batched_steps={snap['batched_steps']};"
+            f"single_steps={snap['single_steps']};"
+            f"evictions={snap['evictions']};converged={all_converged}",
+        )
+    emit("serve/validation", 0.0, f"all_converged={ok}")
+    return ok
+
+
+def run():
+    return serve_bench()
+
+
+if __name__ == "__main__":
+    run()

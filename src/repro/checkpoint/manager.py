@@ -169,18 +169,45 @@ class CheckpointManager:
       as a committed checkpoint;
     * :meth:`restore_latest` records every checkpoint it had to skip as
       corrupt/incomplete in :attr:`last_skipped` (a ``[(step, reason)]``
-      list, also logged) — corrupt-tail recovery is visible, not silent.
+      list, also logged) — corrupt-tail recovery is visible, not silent;
+    * retention GC is equally observable: every step :meth:`save`'s
+      garbage collection deletes is recorded in :attr:`last_deleted`
+      (the most recent GC pass) and counted in :attr:`deleted_total`, so
+      a high-frequency writer (e.g. the serving layer's per-tenant LRU
+      spills) can see exactly what its ``keep_last`` budget discarded.
+
+    ``keep_last`` is the retention budget: only the newest ``keep_last``
+    committed steps survive a save (``keep`` is the original name for
+    the same knob and remains accepted; ``keep_last`` wins when both are
+    given).  ``keep_last=None``/``keep=None`` disables GC — unbounded
+    retention, the caller owns cleanup.
     """
 
-    def __init__(self, directory: str, keep: int = 3):
+    def __init__(
+        self,
+        directory: str,
+        keep: Optional[int] = 3,
+        *,
+        keep_last: Optional[int] = None,
+    ):
         self.directory = directory
-        self.keep = keep
+        self.keep = keep_last if keep_last is not None else keep
+        if self.keep is not None and self.keep < 1:
+            raise ValueError(
+                f"keep_last must be >= 1 (or None for unbounded), "
+                f"got {self.keep}"
+            )
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
         self._async_error: Optional[BaseException] = None
         # (step, reason) for every checkpoint the last restore_latest
         # call skipped as unreadable, newest first.
         self.last_skipped: list = []
+        # Steps the most recent GC pass deleted (oldest first), and the
+        # lifetime total — the `last_skipped`-style observability of the
+        # retention policy.
+        self.last_deleted: list = []
+        self.deleted_total: int = 0
 
     # -- writing ----------------------------------------------------------
     def save(self, tree: Pytree, step: int, *, extra: Optional[dict] = None,
@@ -257,9 +284,20 @@ class CheckpointManager:
         return None
 
     def _gc(self):
+        if self.keep is None:
+            return
         steps = self.steps()
+        deleted = []
         for step in steps[: -self.keep]:
             shutil.rmtree(
                 os.path.join(self.directory, f"step_{step:08d}"),
                 ignore_errors=True,
+            )
+            deleted.append(step)
+        if deleted:
+            self.last_deleted = deleted
+            self.deleted_total += len(deleted)
+            logger.info(
+                "checkpoint GC at %s deleted %d step(s) %s (keep_last=%d)",
+                self.directory, len(deleted), deleted, self.keep,
             )

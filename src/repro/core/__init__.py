@@ -19,6 +19,8 @@ from repro.core.api import (
     solve_batch,
     solve_batch_jit,
     solve_jit,
+    solve_pool_step,
+    solve_pool_step_jit,
     solve_sequence,
 )
 from repro.core.faults import FaultInjectingOperator, truncate_latest_checkpoint
@@ -81,6 +83,8 @@ __all__ = [
     "solve_batch",
     "solve_batch_jit",
     "solve_jit",
+    "solve_pool_step",
+    "solve_pool_step_jit",
     "solve_sequence",
     "FaultInjectingOperator",
     "truncate_latest_checkpoint",

@@ -918,3 +918,117 @@ solve_batch_jit = jax.jit(
         "carry_x",
     ),
 )
+
+
+# ---------------------------------------------------------------------------
+# solve_pool_step — one slot-masked serving step over a fixed slot pool
+# ---------------------------------------------------------------------------
+
+
+def _slot_bcast(active: jnp.ndarray, leaf: jnp.ndarray) -> jnp.ndarray:
+    """Broadcast a ``(B,)`` slot mask against a ``(B, …)`` leaf."""
+    return active.reshape(active.shape + (1,) * (leaf.ndim - 1))
+
+
+def solve_pool_step(
+    systems: Any,
+    b_batch: Pytree,
+    spec: Optional[SolveSpec],
+    state: RecycleState,
+    active: jnp.ndarray,
+    *,
+    make_operator: Optional[Callable[[Any], Any]] = None,
+    make_preconditioner: Optional[Callable[[Any], Any]] = None,
+) -> BatchSolveResult:
+    """One batched serving step over a FIXED pool of B slots, mask-aware.
+
+    The serving layer (:mod:`repro.serve`) keeps B device-resident
+    :class:`RecycleState` slots and, each scheduler tick, serves whatever
+    subset of slots has work with ONE :func:`solve_batch` call.  This
+    entry point owns the masking semantics of that step:
+
+    * ``active`` is the ``(B,)`` bool slot mask.  Inactive slots (empty,
+      or resident tenants with no pending request this tick) are served a
+      ZERO right-hand side: ``‖r₀‖ = 0 ≤ max(tol·0, atol)`` so they
+      converge before iteration 1, their lanes freeze, and the
+      cross-tenant matvec gate (``psum`` over the vmap axis) stops
+      charging them the moment the last *active* tenant converges — an
+      idle slot never stalls or poisons its neighbours.
+    * Inactive slots' ``RecycleState`` passes through BIT-UNTOUCHED: the
+      post-step merge restores their incoming state leaf-wise, so a
+      resident-but-idle tenant's warm basis (and ``systems_solved``
+      counter) survives any number of ticks it sits out.
+    * Inactive slots' diagnostics are scrubbed: ``info``/``report``
+      report 0 iterations / 0 matvecs / CONVERGED for them, so pool
+      metrics can sum per-slot counters without first filtering (the k
+      refresh matvecs an idle warm slot's lane *physically* rides along
+      in the batched GEMM are not attributed to any tenant — they are
+      pool overhead, visible only in wall-clock).
+
+    Dispatch note: the B=1 degenerate case (exactly one active slot)
+    should NOT come here — the vmapped while-loop lowering pays a masked
+    select/broadcast tax that loses to plain :func:`solve` at B=1 (the
+    ``batch/`` bench records it); :class:`repro.serve.SolveService`
+    gathers the single slot and dispatches through :data:`solve_jit`
+    instead.  This function stays total — it accepts any mask, including
+    one-hot — so the fast path is an optimization, not a semantic fork.
+    """
+    spec = SolveSpec() if spec is None else spec
+    if spec.method != "defcg":
+        raise ValueError(
+            "solve_pool_step carries per-slot RecycleState — it needs "
+            f"spec.method='defcg', got {spec.method!r}"
+        )
+    if state is None:
+        state = _batched_zero_state(b_batch, spec, axes=1)
+    active = jnp.asarray(active, bool)
+    b_masked = jax.tree_util.tree_map(
+        lambda l: jnp.where(_slot_bcast(active, l), l, jnp.zeros_like(l)),
+        b_batch,
+    )
+    res = solve_batch(
+        systems,
+        b_masked,
+        spec,
+        state,
+        make_operator=make_operator,
+        make_preconditioner=make_preconditioner,
+    )
+    state_out = jax.tree_util.tree_map(
+        lambda new, old: jnp.where(_slot_bcast(active, new), new, old),
+        res.state,
+        state,
+    )
+    info = res.info
+    zero = jnp.int32(0)
+    masked_info = SolveInfo(
+        iterations=jnp.where(active, info.iterations, zero),
+        converged=jnp.where(active, info.converged, True),
+        residual_norm=jnp.where(
+            active, info.residual_norm, jnp.zeros_like(info.residual_norm)
+        ),
+        matvecs=jnp.where(active, info.matvecs, zero),
+        residual_norms=info.residual_norms,
+        breakdown=jnp.where(active, jnp.asarray(info.breakdown, bool), False),
+        status=jnp.where(active, jnp.asarray(info.status, jnp.int32), zero),
+        guard_fired=jnp.where(
+            active, jnp.asarray(info.guard_fired, bool), False
+        ),
+    )
+    report = SolveReport(
+        status=masked_info.status,
+        rung=jnp.where(active, res.report.rung, zero),
+        guard_firings=jnp.asarray(masked_info.guard_fired, jnp.int32),
+        matvecs=masked_info.matvecs,
+    )
+    x = jax.tree_util.tree_map(
+        lambda l: jnp.where(_slot_bcast(active, l), l, jnp.zeros_like(l)),
+        res.x,
+    )
+    return BatchSolveResult(x=x, info=masked_info, state=state_out, report=report)
+
+
+solve_pool_step_jit = jax.jit(
+    solve_pool_step,
+    static_argnames=("spec", "make_operator", "make_preconditioner"),
+)

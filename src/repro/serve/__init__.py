@@ -1,0 +1,45 @@
+"""repro.serve — the multi-tenant solve service over the solver front doors.
+
+The paper frames recycling as transfer learning of a low-rank
+approximation across a time-series of numerical tasks; this package is
+that framing as a *serving* system.  Each tenant (one user's GP /
+Laplace / Newton sequence) carries an evolving
+:class:`repro.core.RecycleState`; the service keeps B of them resident
+on device in a :class:`StatePool`, serves every resident tenant's next
+system with ONE slot-masked :func:`repro.core.solve_pool_step` per tick
+(continuous batching), spills LRU-cold tenants through
+:class:`repro.checkpoint.CheckpointManager` so their warm bases survive
+eviction, and exposes per-tenant + pool telemetry as plain dicts.
+
+Layering (each module's docstring carries its contract):
+
+* :mod:`repro.serve.pool`      — device-resident slots + the spill store
+* :mod:`repro.serve.scheduler` — admission/eviction/serve event loop
+* :mod:`repro.serve.session`   — the tenant-facing handle
+* :mod:`repro.serve.metrics`   — per-tenant and pool-level counters
+"""
+
+from repro.serve.metrics import ServeMetrics, TenantMetrics
+from repro.serve.pool import (
+    PoolFullError,
+    StatePool,
+    TenantStateStore,
+)
+from repro.serve.scheduler import (
+    ServedResult,
+    SolveService,
+    Ticket,
+)
+from repro.serve.session import Session
+
+__all__ = [
+    "PoolFullError",
+    "ServeMetrics",
+    "ServedResult",
+    "Session",
+    "SolveService",
+    "StatePool",
+    "TenantMetrics",
+    "TenantStateStore",
+    "Ticket",
+]

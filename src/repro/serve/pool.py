@@ -1,0 +1,304 @@
+"""Device-resident ``RecycleState`` slot pool + the tenant spill store.
+
+The serving substrate the ROADMAP's millions-of-users story needs: B
+fixed slots hold one stacked :class:`repro.core.RecycleState` pytree
+(leading axis B, resident on device for the whole service lifetime) plus
+host-side per-slot metadata — bound tenant key, last-served tick.  A
+tenant's "computational transfer learning" state (the paper's recycled
+subspace) lives in its slot between requests; the scheduler serves every
+resident tenant's next system with ONE :func:`repro.core.solve_pool_step`
+call, so admitting a tenant never costs a new compilation and an idle or
+poisoned slot never stalls its neighbours (masking semantics live in the
+step entry, per-slot breakdown retirement in the PR 6 runtime).
+
+Two classes:
+
+* :class:`StatePool` — the slots.  ``admit`` binds a tenant to a free
+  slot (writing its state — cold zeros or a restored basis — into the
+  stacked pytree with one ``.at[slot].set``), ``release`` reads the
+  tenant's state back out and zeroes the slot.  The pool is policy-free:
+  WHO to evict is the scheduler's call (:meth:`lru_tenant` just answers
+  the least-recently-served question).
+* :class:`TenantStateStore` — where evicted states go.  With a directory
+  it spills through :class:`repro.checkpoint.CheckpointManager` (one
+  manager per tenant key, ``keep_last`` retention GC, atomic writes —
+  an evicted tenant's warm basis survives a process death); without one
+  it keeps host-RAM copies (same interface, no durability).  Either way
+  re-admission restores the exact bytes that were evicted: the round
+  trip is bit-for-bit (full-precision npz / host copy), which is the
+  transfer-learning payoff — a returning tenant's first solve deflates
+  with the basis it left behind.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core import RecycleState, SolveSpec
+
+Pytree = Any
+
+
+class PoolFullError(RuntimeError):
+    """Raised by ``admit`` when no slot is free (scheduler evicts + retries)."""
+
+
+def _tenant_dirname(key: str) -> str:
+    """Filesystem-safe per-tenant directory name (collision-disambiguated)."""
+    safe = re.sub(r"[^A-Za-z0-9._-]", "_", str(key))[:64]
+    if safe != str(key):
+        import hashlib
+
+        safe += "-" + hashlib.sha256(str(key).encode()).hexdigest()[:8]
+    return f"tenant_{safe}"
+
+
+class TenantStateStore:
+    """Spill/restore per-tenant ``RecycleState`` by tenant key.
+
+    ``directory=None`` keeps host-RAM copies (fast, non-durable);
+    otherwise each tenant key owns a :class:`CheckpointManager` under
+    ``<directory>/tenant_<key>/`` with ``keep_last`` retention — every
+    eviction writes a NEW step (monotonic per tenant), old steps are
+    GC'd, and :attr:`gc_deleted_total` aggregates the managers'
+    ``deleted_total`` observability for pool metrics.
+    """
+
+    def __init__(
+        self, directory: Optional[str] = None, *, keep_last: int = 4
+    ):
+        self.directory = directory
+        self.keep_last = keep_last
+        self._managers: Dict[str, CheckpointManager] = {}
+        self._memory: Dict[str, RecycleState] = {}
+        self._steps: Dict[str, int] = {}
+
+    def _manager(self, key: str) -> CheckpointManager:
+        if key not in self._managers:
+            self._managers[key] = CheckpointManager(
+                os.path.join(self.directory, _tenant_dirname(key)),
+                keep_last=self.keep_last,
+            )
+            existing = self._managers[key].steps()
+            self._steps[key] = max(existing) if existing else 0
+        return self._managers[key]
+
+    @property
+    def gc_deleted_total(self) -> int:
+        return sum(m.deleted_total for m in self._managers.values())
+
+    def spill(self, key: str, state: RecycleState) -> None:
+        """Persist ``state`` for ``key`` (a new step; old steps GC'd)."""
+        if self.directory is None:
+            self._memory[key] = jax.device_get(state)
+            return
+        mgr = self._manager(key)
+        self._steps[key] += 1
+        mgr.save(
+            state,
+            step=self._steps[key],
+            extra={"tenant": str(key)},
+            blocking=True,
+        )
+
+    def restore(
+        self, key: str, template: RecycleState
+    ) -> Optional[RecycleState]:
+        """The newest spilled state for ``key``, or None if never spilled."""
+        if self.directory is None:
+            got = self._memory.get(key)
+            if got is None:
+                return None
+            return jax.tree_util.tree_map(jnp.asarray, got)
+        mgr = self._manager(key)
+        restored = mgr.restore_latest(template)
+        if restored is None:
+            return None
+        _, state, _ = restored
+        return state
+
+    def has(self, key: str) -> bool:
+        if self.directory is None:
+            return key in self._memory
+        return bool(self._manager(key).steps())
+
+
+class StatePool:
+    """B fixed device-resident ``RecycleState`` slots + host metadata.
+
+    The stacked state (leading axis B on every leaf) is allocated lazily
+    on the first :meth:`admit` — the pool learns ``n`` and the dtype from
+    the first tenant — and then NEVER reallocated: serving shape is
+    fixed, so every tick reuses one compiled batched step.
+    """
+
+    def __init__(
+        self,
+        slots: int,
+        spec: Optional[SolveSpec] = None,
+        *,
+        n: Optional[int] = None,
+        dtype=None,
+    ):
+        if slots < 1:
+            raise ValueError(f"a pool needs slots >= 1, got {slots}")
+        self.slots = slots
+        self.spec = SolveSpec() if spec is None else spec
+        self.state: Optional[RecycleState] = None
+        self.tenants: List[Optional[str]] = [None] * slots
+        self.last_served = np.zeros(slots, np.int64)
+        self._slot_of: Dict[str, int] = {}
+        if n is not None:
+            self.ensure_allocated(n, dtype if dtype is not None else jnp.float64)
+
+    # -- allocation --------------------------------------------------------
+    @property
+    def n(self) -> Optional[int]:
+        return None if self.state is None else self.state.W.shape[-1]
+
+    @property
+    def dtype(self):
+        return None if self.state is None else self.state.W.dtype
+
+    def ensure_allocated(self, n: int, dtype) -> None:
+        if self.state is None:
+            zero = RecycleState.zeros(self.spec.k, n, dtype)
+            self.state = jax.tree_util.tree_map(
+                lambda l: jnp.zeros((self.slots,) + jnp.shape(l), l.dtype),
+                zero,
+            )
+        elif self.n != n:
+            raise ValueError(
+                f"pool is allocated for n={self.n}; a tenant with n={n} "
+                "needs its own pool (serving shape is fixed per pool)"
+            )
+
+    def zero_slot_state(self) -> RecycleState:
+        """A cold single-slot state template (pool must be allocated)."""
+        if self.state is None:
+            raise RuntimeError("pool not allocated yet — admit a tenant first")
+        return RecycleState.zeros(self.spec.k, self.n, self.dtype)
+
+    # -- membership --------------------------------------------------------
+    @property
+    def occupancy(self) -> int:
+        return len(self._slot_of)
+
+    def free_slots(self) -> List[int]:
+        return [i for i, t in enumerate(self.tenants) if t is None]
+
+    def slot_of(self, key: str) -> Optional[int]:
+        return self._slot_of.get(key)
+
+    def resident(self, key: str) -> bool:
+        return key in self._slot_of
+
+    def lru_tenant(self, exclude=()) -> Optional[str]:
+        """Least-recently-served resident tenant not in ``exclude``."""
+        best_key, best_tick = None, None
+        for slot, key in enumerate(self.tenants):
+            if key is None or key in exclude:
+                continue
+            if best_tick is None or self.last_served[slot] < best_tick:
+                best_key, best_tick = key, self.last_served[slot]
+        return best_key
+
+    # -- admit / release ---------------------------------------------------
+    def admit(
+        self,
+        key: str,
+        state: Optional[RecycleState] = None,
+        *,
+        n: Optional[int] = None,
+        dtype=None,
+        tick: int = 0,
+    ) -> int:
+        """Bind ``key`` to a free slot; write its state (or stay cold).
+
+        Raises :class:`PoolFullError` when no slot is free — the
+        scheduler owns the eviction policy, so it catches this, spills a
+        victim, and retries.
+        """
+        if key in self._slot_of:
+            raise ValueError(f"tenant {key!r} is already resident")
+        free = self.free_slots()
+        if not free:
+            raise PoolFullError(
+                f"all {self.slots} slots are bound; evict a tenant first"
+            )
+        if state is not None:
+            leaf = state.W
+            self.ensure_allocated(leaf.shape[-1], leaf.dtype)
+        elif n is not None:
+            self.ensure_allocated(
+                n, dtype if dtype is not None else jnp.float64
+            )
+        if self.state is None:
+            raise RuntimeError(
+                "cold admission into an unallocated pool needs n= (and "
+                "optionally dtype=) to size the slots"
+            )
+        slot = free[0]
+        self.tenants[slot] = key
+        self._slot_of[key] = slot
+        self.last_served[slot] = tick
+        if state is not None:
+            self.write_slot(slot, state)
+        # A freed slot is zeroed on release, so a cold admit is genuinely
+        # cold without another device write.
+        return slot
+
+    def release(self, key: str) -> RecycleState:
+        """Unbind ``key``; return its slot state and zero the slot."""
+        slot = self._slot_of.pop(key, None)
+        if slot is None:
+            raise KeyError(f"tenant {key!r} is not resident")
+        state = self.slot_state(slot)
+        self.tenants[slot] = None
+        self.last_served[slot] = 0
+        self.state = jax.tree_util.tree_map(
+            lambda buf: buf.at[slot].set(jnp.zeros_like(buf[slot])),
+            self.state,
+        )
+        return state
+
+    # -- slot state I/O ----------------------------------------------------
+    def slot_state(self, slot: int) -> RecycleState:
+        return jax.tree_util.tree_map(lambda buf: buf[slot], self.state)
+
+    def write_slot(self, slot: int, state: RecycleState) -> None:
+        self.state = jax.tree_util.tree_map(
+            lambda buf, s: buf.at[slot].set(jnp.asarray(s, buf.dtype)),
+            self.state,
+            state,
+        )
+
+    def touch(self, slots, tick: int) -> None:
+        for slot in slots:
+            self.last_served[slot] = tick
+
+    # -- introspection -----------------------------------------------------
+    def slot_table(self) -> List[dict]:
+        """Host-side per-slot metadata snapshot (one dict per slot)."""
+        solved = (
+            np.asarray(self.state.systems_solved)
+            if self.state is not None
+            else np.zeros(self.slots, np.int32)
+        )
+        return [
+            {
+                "slot": i,
+                "tenant": self.tenants[i],
+                "active": self.tenants[i] is not None,
+                "last_served_tick": int(self.last_served[i]),
+                "systems_solved": int(solved[i]),
+            }
+            for i in range(self.slots)
+        ]

@@ -28,6 +28,8 @@ EXPECTED_CORE_ALL = sorted(
         "solve_batch",
         "solve_batch_jit",
         "solve_jit",
+        "solve_pool_step",
+        "solve_pool_step_jit",
         "solve_sequence",
         # fault injection (ISSUE 6: chaos instrumentation)
         "FaultInjectingOperator",

@@ -1,0 +1,580 @@
+"""repro.serve (ISSUE 8 tentpole): the multi-tenant solve service.
+
+Five layers of checks, all in the non-slow tier (small dense/GP-shaped
+problems, n ≤ 96):
+
+  1. ``solve_pool_step`` masking semantics: inactive slots' RecycleState
+     passes through BIT-untouched, their diagnostics are scrubbed to
+     zero/CONVERGED, and active slots match a plain ``solve_batch``;
+  2. pool lifecycle: admit → serve → evict → re-admit restores the same
+     ``RecycleState`` bit-for-bit (through the CheckpointManager spill
+     store), and the re-admitted tenant solves warm (fewer iterations
+     than its own cold start);
+  3. parity: a pool serving T tenants matches T sequential
+     ``solve_sequence`` runs — per-system iterations AND matvec
+     accounting — because every layer shares ``_one_recycled_solve``;
+  4. fault isolation: a poisoned tenant (PR 6's ``FaultInjectingOperator``)
+     is retired into its own slot's report; its neighbours converge and
+     its own next (healthy) request recovers from a zeroed basis;
+  5. the end-to-end acceptance scenario: tenants arrive/depart
+     asynchronously over drifting GP Newton sequences with eviction
+     pressure, per-tenant reports + pool metrics come back, and the
+     evicted-then-readmitted tenant beats a cold tenant.
+
+Plus the ISSUE 8 satellites: CheckpointManager ``keep_last`` retention
+GC with ``last_deleted`` observability, and the B=1 single-dispatch
+fence (metrics prove the pool bypassed the vmapped path).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.core import (
+    DenseMatrixOperator,
+    FaultInjectingOperator,
+    RecycleState,
+    SolveSpec,
+    SolveStatus,
+    solve_batch,
+    solve_jit,
+    solve_pool_step,
+    solve_sequence,
+)
+from repro.serve import (
+    PoolFullError,
+    Session,
+    SolveService,
+    StatePool,
+    TenantStateStore,
+)
+
+SPEC = SolveSpec(k=6, ell=10, tol=1e-8, maxiter=2000)
+
+
+def _spd_family(n=64, k=6, seed=0):
+    """A base SPD matrix with a deflatable tail (test_api's recipe)."""
+    rng = np.random.default_rng(seed)
+    q, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    eigs = np.concatenate(
+        [np.linspace(1.0, 5.0, n - k), np.logspace(3.0, 4.0, k)]
+    )
+    return (q * eigs) @ q.T
+
+
+def _newton_trace(base, seed, num=3, drift=0.01):
+    """A drifting sequence of (operator, rhs) pairs for one tenant."""
+    n = base.shape[0]
+    rng = np.random.default_rng(seed)
+    mats, bs = [], []
+    for _ in range(num):
+        pert = rng.standard_normal((n, n)) * drift
+        mats.append(jnp.asarray(base + pert @ pert.T))
+        bs.append(jnp.asarray(rng.standard_normal(n)))
+    return mats, bs
+
+
+def _leaves_equal(a, b):
+    return all(
+        bool(jnp.array_equal(x, y))
+        for x, y in zip(
+            jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+        )
+    )
+
+
+BASE = _spd_family()
+
+
+# ---------------------------------------------------------------------------
+# 1. solve_pool_step masking semantics
+# ---------------------------------------------------------------------------
+
+
+class TestSolvePoolStep:
+    def _warm_batched_state(self, mats, bs):
+        """A (B, k, n) state with genuinely nonzero bases in every slot."""
+        res = solve_batch(
+            jnp.stack(mats), jnp.stack(bs), SPEC, make_operator=DenseMatrixOperator
+        )
+        return res.state
+
+    def test_inactive_state_bit_untouched(self):
+        mats, bs = _newton_trace(BASE, seed=1, num=3)
+        state = self._warm_batched_state(mats, bs)
+        active = jnp.asarray([True, False, True])
+        res = solve_pool_step(
+            DenseMatrixOperator(jnp.stack(mats)),
+            jnp.stack(bs),
+            SPEC,
+            state,
+            active,
+        )
+        before = jax.tree_util.tree_map(lambda l: l[1], state)
+        after = jax.tree_util.tree_map(lambda l: l[1], res.state)
+        assert _leaves_equal(before, after)
+        # ... including the counter: the idle slot did NOT solve a system.
+        assert int(res.state.systems_solved[1]) == int(
+            state.systems_solved[1]
+        )
+        assert int(res.state.systems_solved[0]) == int(
+            state.systems_solved[0]
+        ) + 1
+
+    def test_inactive_diagnostics_scrubbed(self):
+        mats, bs = _newton_trace(BASE, seed=2, num=3)
+        state = self._warm_batched_state(mats, bs)
+        active = jnp.asarray([True, False, True])
+        res = solve_pool_step(
+            DenseMatrixOperator(jnp.stack(mats)),
+            jnp.stack(bs),
+            SPEC,
+            state,
+            active,
+        )
+        assert int(res.info.iterations[1]) == 0
+        assert int(res.info.matvecs[1]) == 0
+        assert int(res.report.matvecs[1]) == 0
+        assert int(res.report.rung[1]) == 0
+        assert int(res.report.status[1]) == SolveStatus.CONVERGED
+        assert bool(res.info.converged[1])
+        assert float(jnp.abs(res.x[1]).max()) == 0.0
+
+    def test_active_slots_match_solve_batch(self):
+        """With all slots active the step IS solve_batch (plus a no-op
+        merge): solutions, counts, and outgoing states must agree."""
+        mats, bs = _newton_trace(BASE, seed=3, num=3)
+        state = self._warm_batched_state(mats, bs)
+        plain = solve_batch(
+            DenseMatrixOperator(jnp.stack(mats)), jnp.stack(bs), SPEC, state
+        )
+        masked = solve_pool_step(
+            DenseMatrixOperator(jnp.stack(mats)),
+            jnp.stack(bs),
+            SPEC,
+            state,
+            jnp.asarray([True, True, True]),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(plain.info.iterations), np.asarray(masked.info.iterations)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(plain.info.matvecs), np.asarray(masked.info.matvecs)
+        )
+        assert _leaves_equal(plain.state, masked.state)
+        np.testing.assert_array_equal(np.asarray(plain.x), np.asarray(masked.x))
+
+    def test_rejects_plain_cg(self):
+        mats, bs = _newton_trace(BASE, seed=4, num=2)
+        with pytest.raises(ValueError, match="defcg"):
+            solve_pool_step(
+                DenseMatrixOperator(jnp.stack(mats[:1])),
+                jnp.stack(bs[:1]),
+                SolveSpec(method="cg"),
+                None,
+                jnp.asarray([True]),
+            )
+
+
+# ---------------------------------------------------------------------------
+# 2. StatePool + TenantStateStore lifecycle
+# ---------------------------------------------------------------------------
+
+
+class TestStatePool:
+    def test_admit_release_zeroes_slot(self):
+        pool = StatePool(2, SPEC, n=16, dtype=jnp.float64)
+        warm = RecycleState(
+            W=jnp.ones((SPEC.k, 16)),
+            AW=2.0 * jnp.ones((SPEC.k, 16)),
+            theta=jnp.ones((SPEC.k,)),
+            systems_solved=jnp.int32(5),
+            drift=jnp.float64(0.25),
+        )
+        slot = pool.admit("a", warm, tick=3)
+        assert pool.slot_of("a") == slot
+        assert _leaves_equal(pool.slot_state(slot), warm)
+        back = pool.release("a")
+        assert _leaves_equal(back, warm)
+        # The freed slot is genuinely cold again.
+        assert float(jnp.abs(pool.slot_state(slot).W).max()) == 0.0
+        assert not pool.resident("a")
+
+    def test_pool_full_and_lru(self):
+        pool = StatePool(2, SPEC, n=8, dtype=jnp.float64)
+        pool.admit("a", tick=1)
+        pool.admit("b", tick=2)
+        with pytest.raises(PoolFullError):
+            pool.admit("c", n=8)
+        assert pool.lru_tenant() == "a"
+        pool.touch([pool.slot_of("a")], tick=9)
+        assert pool.lru_tenant() == "b"
+        assert pool.lru_tenant(exclude={"b"}) == "a"
+        assert pool.lru_tenant(exclude={"a", "b"}) is None
+
+    def test_fixed_n_enforced(self):
+        pool = StatePool(2, SPEC, n=8, dtype=jnp.float64)
+        with pytest.raises(ValueError, match="allocated for n=8"):
+            pool.admit("a", n=16)
+
+    def test_slot_table(self):
+        pool = StatePool(2, SPEC, n=8, dtype=jnp.float64)
+        pool.admit("a", tick=4)
+        table = pool.slot_table()
+        assert table[0]["tenant"] == "a" and table[0]["active"]
+        assert table[0]["last_served_tick"] == 4
+        assert table[1]["tenant"] is None and not table[1]["active"]
+
+    def test_store_roundtrip_bit_for_bit(self, tmp_path):
+        store = TenantStateStore(str(tmp_path), keep_last=2)
+        state = RecycleState(
+            W=jnp.asarray(np.random.default_rng(0).standard_normal((6, 16))),
+            AW=jnp.asarray(np.random.default_rng(1).standard_normal((6, 16))),
+            theta=jnp.asarray(np.random.default_rng(2).standard_normal(6)),
+            systems_solved=jnp.int32(7),
+            drift=jnp.float64(1e-9),
+        )
+        assert not store.has("t")
+        store.spill("t", state)
+        assert store.has("t")
+        back = store.restore(
+            "t", jax.tree_util.tree_map(jnp.zeros_like, state)
+        )
+        assert _leaves_equal(state, back)
+
+    def test_store_memory_mode(self):
+        store = TenantStateStore(None)
+        state = RecycleState.zeros(4, 8)
+        assert store.restore("t", state) is None
+        store.spill("t", state)
+        assert store.has("t") and _leaves_equal(store.restore("t", state), state)
+
+    def test_store_retention_gc_observable(self, tmp_path):
+        store = TenantStateStore(str(tmp_path), keep_last=2)
+        state = RecycleState.zeros(4, 8)
+        for _ in range(5):
+            store.spill("t", state)
+        mgr = store._manager("t")
+        assert mgr.steps() == [4, 5]
+        assert mgr.deleted_total == 3
+        assert mgr.last_deleted == [3]
+        assert store.gc_deleted_total == 3
+
+
+class TestCheckpointRetention:
+    """Satellite: keep_last GC + last_skipped-style delete observability."""
+
+    def test_keep_last_wins_over_keep(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=10, keep_last=2)
+        tree = {"x": jnp.arange(3.0)}
+        for step in range(1, 6):
+            mgr.save(tree, step=step)
+        assert mgr.steps() == [4, 5]
+        assert mgr.deleted_total == 3
+
+    def test_unbounded_retention(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=None)
+        tree = {"x": jnp.arange(3.0)}
+        for step in range(1, 6):
+            mgr.save(tree, step=step)
+        assert mgr.steps() == [1, 2, 3, 4, 5]
+        assert mgr.deleted_total == 0 and mgr.last_deleted == []
+
+    def test_invalid_keep_rejected(self, tmp_path):
+        with pytest.raises(ValueError, match="keep_last"):
+            CheckpointManager(str(tmp_path), keep_last=0)
+
+
+# ---------------------------------------------------------------------------
+# 3. Service lifecycle + parity
+# ---------------------------------------------------------------------------
+
+
+class TestServiceLifecycle:
+    def test_evict_readmit_restores_state_bit_for_bit(self, tmp_path):
+        svc = SolveService(SPEC, slots=2, checkpoint_dir=str(tmp_path))
+        traces = {t: _newton_trace(BASE, seed=i + 10, num=2)
+                  for i, t in enumerate(("a", "b", "c"))}
+
+        def serve_one(t, j):
+            mats, bs = traces[t]
+            return svc.session(t).solve(DenseMatrixOperator(mats[j]), bs[j])
+
+        serve_one("a", 0)
+        serve_one("b", 0)
+        state_a = svc.pool.slot_state(svc.pool.slot_of("a"))
+        serve_one("c", 0)  # pool full -> evicts LRU idle (a)
+        assert not svc.pool.resident("a")
+        assert svc.store.has("a")
+        restored = svc.store.restore("a", svc.pool.zero_slot_state())
+        assert _leaves_equal(state_a, restored)
+
+        r_warm = serve_one("a", 1)  # re-admission from the spilled state
+        snap = svc.metrics_snapshot()
+        assert snap["tenants"]["a"]["evictions"] == 1
+        assert snap["tenants"]["a"]["restores"] == 1
+        assert snap["pool"]["evictions"] == 2  # a's and the one a forced
+        # The restored basis is warm: far fewer iterations than a's cold
+        # first system over the same drifting family.
+        r_cold_iters = snap["tenants"]["c"]["iterations"]
+        assert r_warm.iterations < 0.6 * r_cold_iters
+
+    def test_pool_parity_with_sequential_solve_sequence(self):
+        """T pooled tenants == T sequential solve_sequence runs: same
+        per-system iterations and matvec accounting, same solutions."""
+        T, num = 3, 3
+        svc = SolveService(SPEC, slots=T)
+        traces = {f"t{i}": _newton_trace(BASE, seed=20 + i, num=num)
+                  for i in range(T)}
+        tickets = {t: [] for t in traces}
+        sessions = {t: svc.session(t) for t in traces}
+        for j in range(num):
+            for t in traces:
+                mats, bs = traces[t]
+                tickets[t].append(
+                    sessions[t].submit(DenseMatrixOperator(mats[j]), bs[j])
+                )
+        served = svc.run_until_idle()
+        assert served == T * num
+        # Every tick batched all T tenants (continuous batching, no
+        # single-dispatch fallback in this saturated scenario).
+        assert svc.metrics.batched_steps == num
+        assert svc.metrics.single_steps == 0
+
+        for t in traces:
+            mats, bs = traces[t]
+            seq = solve_sequence(
+                jnp.stack(mats), jnp.stack(bs), SPEC,
+                make_operator=DenseMatrixOperator,
+            )
+            for j, tk in enumerate(tickets[t]):
+                r = svc.result(tk, drive=False)
+                assert r.iterations == int(seq.info.iterations[j]), (t, j)
+                assert r.matvecs == int(seq.info.matvecs[j]), (t, j)
+                assert r.converged and r.status == SolveStatus.CONVERGED
+                np.testing.assert_allclose(
+                    np.asarray(r.x), np.asarray(seq.x[j]),
+                    rtol=1e-9, atol=1e-9,
+                )
+
+    def test_single_tenant_uses_plain_solve_dispatch(self):
+        """B=1 fence: one active slot bypasses the vmapped step and must
+        bit-match the plain solve front door."""
+        svc = SolveService(SPEC, slots=4)
+        mats, bs = _newton_trace(BASE, seed=30, num=2)
+        s = svc.session("only")
+        r0 = s.solve(DenseMatrixOperator(mats[0]), bs[0])
+        r1 = s.solve(DenseMatrixOperator(mats[1]), bs[1])
+        assert svc.metrics.single_steps == 2
+        assert svc.metrics.batched_steps == 0
+        state = None
+        for j, r in enumerate((r0, r1)):
+            ref = solve_jit(DenseMatrixOperator(mats[j]), bs[j], SPEC, state)
+            state = ref.state
+            assert r.iterations == int(ref.info.iterations)
+            assert r.matvecs == int(ref.info.matvecs)
+            np.testing.assert_array_equal(np.asarray(r.x), np.asarray(ref.x))
+
+    def test_busy_residents_never_evicted(self):
+        """With every slot holding pending work, a newcomer waits (and
+        its queue_wait_ticks accrue) instead of evicting a busy tenant."""
+        svc = SolveService(SPEC, slots=2)
+        traces = {t: _newton_trace(BASE, seed=40 + i, num=2)
+                  for i, t in enumerate(("a", "b", "c"))}
+        tickets = []
+        for t, (mats, bs) in traces.items():
+            s = svc.session(t)
+            for m, b in zip(mats, bs):
+                tickets.append(s.submit(DenseMatrixOperator(m), b))
+        svc.run_until_idle()
+        results = [svc.result(tk, drive=False) for tk in tickets]
+        assert all(r.converged for r in results)
+        snap = svc.metrics_snapshot()
+        # c could only be admitted after a or b drained (2 ticks each).
+        assert snap["tenants"]["c"]["queue_wait_ticks"] > 0
+        assert snap["pool"]["queue_depth_peak"] == 6
+
+    def test_close_with_pending_refuses(self):
+        svc = SolveService(SPEC, slots=2)
+        mats, bs = _newton_trace(BASE, seed=50, num=1)
+        s = svc.session("a")
+        s.submit(DenseMatrixOperator(mats[0]), bs[0])
+        with pytest.raises(RuntimeError, match="unserved"):
+            s.close()
+        s.result()
+        s.close()
+        with pytest.raises(RuntimeError, match="closed"):
+            s.submit(DenseMatrixOperator(mats[0]), bs[0])
+
+    def test_mixed_operator_family_rejected(self):
+        svc = SolveService(SPEC, slots=2)
+        mats, bs = _newton_trace(BASE, seed=60, num=2)
+        sa, sb = svc.session("a"), svc.session("b")
+        sa.submit(DenseMatrixOperator(mats[0]), bs[0])
+        sb.submit(
+            FaultInjectingOperator(DenseMatrixOperator(mats[1]), 0.0), bs[1]
+        )
+        with pytest.raises(ValueError, match="operator family"):
+            svc.tick()
+
+    def test_service_requires_defcg(self):
+        with pytest.raises(ValueError, match="defcg"):
+            SolveService(SolveSpec(method="cg"))
+
+
+# ---------------------------------------------------------------------------
+# 4. Fault isolation under the pool (PR 6 injectors reused)
+# ---------------------------------------------------------------------------
+
+
+class TestPoisonedTenantIsolation:
+    def test_neighbours_unharmed_and_tenant_recovers(self):
+        svc = SolveService(SPEC, slots=3)
+        traces = {t: _newton_trace(BASE, seed=70 + i, num=2)
+                  for i, t in enumerate(("good1", "bad", "good2"))}
+        sessions = {t: svc.session(t) for t in traces}
+        tickets = {}
+        for t in traces:
+            mats, bs = traces[t]
+            poison = jnp.nan if t == "bad" else 0.0
+            tickets[t] = sessions[t].submit(
+                FaultInjectingOperator(DenseMatrixOperator(mats[0]), poison),
+                bs[0],
+            )
+        svc.run_until_idle()
+        r_bad = svc.result(tickets["bad"], drive=False)
+        assert r_bad.status >= SolveStatus.BREAKDOWN_NONFINITE
+        assert not r_bad.converged
+        assert np.isfinite(np.asarray(r_bad.x)).all()  # retired, not NaN
+        for t in ("good1", "good2"):
+            r = svc.result(tickets[t], drive=False)
+            assert r.converged and r.status == SolveStatus.CONVERGED
+            mats, bs = traces[t]
+            np.testing.assert_allclose(
+                np.asarray(mats[0] @ r.x), np.asarray(bs[0]),
+                atol=1e-6 * float(jnp.linalg.norm(bs[0])),
+            )
+        # The poisoned slot's outgoing basis was zeroed by retirement, so
+        # the tenant's next HEALTHY request bootstraps cold and converges.
+        mats, bs = traces["bad"]
+        r_next = sessions["bad"].solve(
+            FaultInjectingOperator(DenseMatrixOperator(mats[1]), 0.0), bs[1]
+        )
+        assert r_next.converged
+        snap = svc.metrics_snapshot()
+        assert snap["tenants"]["bad"]["breakdowns"] == 1
+        assert snap["tenants"]["good1"]["breakdowns"] == 0
+
+
+# ---------------------------------------------------------------------------
+# 5. End-to-end acceptance scenario (GP Newton shape, eviction pressure)
+# ---------------------------------------------------------------------------
+
+
+class TestEndToEndScenario:
+    def test_async_arrivals_departures_eviction_and_warm_resume(self, tmp_path):
+        """ISSUE 8 acceptance: tenants arrive/depart asynchronously over
+        drifting GP Newton sequences (A = I + H½KH½), pool smaller than
+        the tenant population, evicted-then-readmitted tenants resume
+        warm, and reports + metrics come back for everyone."""
+        n, T, slots = 80, 5, 2
+        rng = np.random.default_rng(99)
+        q, _ = np.linalg.qr(rng.standard_normal((n, n)))
+        kmat = jnp.asarray((q * np.logspace(1.5, -2, n)) @ q.T)  # PSD "gram"
+        k_mv = lambda v: kmat @ v  # noqa: E731 — one stable kernel closure
+
+        from repro.core import KernelSystemOperator
+
+        def tenant_systems(i, num):
+            r = np.random.default_rng(200 + i)
+            f = r.standard_normal(n) * 0.5
+            out = []
+            for _ in range(num):
+                pi = 1.0 / (1.0 + np.exp(-f))
+                out.append((
+                    KernelSystemOperator(
+                        k_mv, jnp.asarray(np.sqrt(pi * (1 - pi)))
+                    ),
+                    jnp.asarray(r.standard_normal(n)),
+                ))
+                f = f + 0.05 * r.standard_normal(n)
+            return out
+
+        spec = SolveSpec(k=6, ell=10, tol=1e-7, maxiter=1000)
+        svc = SolveService(spec, slots=slots, checkpoint_dir=str(tmp_path))
+
+        # Phase 1: tenants 0/1 each serve two systems, then DEPART
+        # (sessions close, warm bases spill).
+        first_iters = {}
+        for i in (0, 1):
+            with svc.session(f"u{i}") as s:
+                sys_i = tenant_systems(i, 2)
+                r0 = s.solve(*sys_i[0])
+                r1 = s.solve(*sys_i[1])
+                first_iters[i] = (r0.iterations, r1.iterations)
+                assert r0.converged and r1.converged
+                assert r1.iterations < r0.iterations  # recycling works
+        assert svc.pool.occupancy == 0
+
+        # Phase 2: three NEW tenants churn through the 2-slot pool
+        # (eviction pressure among themselves), interleaved arrivals.
+        sessions = {i: svc.session(f"u{i}") for i in (2, 3, 4)}
+        tickets = {i: [] for i in (2, 3, 4)}
+        systems = {i: tenant_systems(i, 2) for i in (2, 3, 4)}
+        for j in range(2):
+            for i in (2, 3, 4):
+                tickets[i].append(sessions[i].submit(*systems[i][j]))
+            svc.tick()
+        svc.run_until_idle()
+        for i in (2, 3, 4):
+            for tk in tickets[i]:
+                assert svc.result(tk, drive=False).converged
+
+        # Phase 3: tenant 0 RETURNS (was evicted to disk at close).  Its
+        # restored basis must beat the cold starts of phase-2 tenants.
+        with svc.session("u0") as s0:
+            r_back = s0.solve(*tenant_systems(0, 3)[2])
+        assert r_back.converged
+        snap = svc.metrics_snapshot()
+        assert snap["tenants"]["u0"]["restores"] == 1
+        cold_iters = [
+            svc.metrics.tenants[f"u{i}"].iterations for i in (2, 3, 4)
+        ]
+        # Cold tenants' FIRST systems dominate their totals; the warm
+        # return must undercut every cold first-solve.
+        assert r_back.iterations < first_iters[0][0]
+        assert all(r_back.iterations < c for c in cold_iters)
+
+        # Telemetry contract: one plain-dict snapshot, json-serializable.
+        import json
+
+        payload = json.dumps(snap)
+        assert "u0" in payload and snap["pool"]["slots"] == slots
+        assert snap["pool"]["served_total"] == 11
+        assert snap["pool"]["evictions"] >= 2
+        assert 0.0 < snap["pool"]["mean_occupancy"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Public surface
+# ---------------------------------------------------------------------------
+
+
+def test_serve_all_resolves():
+    import repro.serve as serve
+
+    for name in serve.__all__:
+        assert getattr(serve, name) is not None, name
+    assert serve.Session is Session
+
+
+def test_served_result_is_frozen():
+    fields = {f.name for f in dataclasses.fields(
+        __import__("repro.serve.scheduler", fromlist=["ServedResult"]).ServedResult
+    )}
+    assert {"x", "iterations", "matvecs", "report", "tick",
+            "queue_wait_ticks"} <= fields
