@@ -1,0 +1,127 @@
+"""Least-squares engine benchmarks: recycled vs cold LSMR + fused kernel.
+
+The acceptance number for the method axis (DESIGN.md §12): on a
+sequence of ill-conditioned drifting ridge problems, deflated
+warm-started LSMR (``deflsmr``, exact NW refresh — overhead CHARGED)
+must beat cold LSMR on total A/Aᵀ products.  The regime matters and is
+reported honestly: spectra with a slow singular tail (logspace decay)
+are where deflation pays; flat Gaussian spectra tie, and the bench
+records that null result too so the win is never oversold.
+
+Also times the fused ``lsmr_update`` three-vector recurrence across the
+impl contract (chunked is the deployable CPU path; reference is the
+jnp oracle).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, log, timed
+from repro.core import DenseMatrixOperator, lsmr, solve_sequence_lsmr_jit
+from repro.kernels import ops
+
+
+def _drifting_lsq(num, m, n, decay, drift, seed=0):
+    """Rectangular sequence A_i = A_{i-1} + drift·‖A‖·G/√(mn), singular
+    values of A_0 set by ``decay`` ('logspace' tail or 'flat')."""
+    rng = np.random.default_rng(seed)
+    U, _ = np.linalg.qr(rng.standard_normal((m, m)))
+    V, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    if decay == "logspace":
+        s = np.logspace(0, -3, n)
+    else:
+        s = np.abs(rng.standard_normal(n)) + 0.5
+    base = U[:, :n] @ np.diag(s) @ V.T
+    mats, bs = [], []
+    for _ in range(num):
+        mats.append(jnp.asarray(base))
+        bs.append(jnp.asarray(rng.standard_normal(m)))
+        base = base + drift * np.linalg.norm(base) / np.sqrt(m * n) * (
+            rng.standard_normal((m, n))
+        )
+    return jnp.stack(mats), jnp.stack(bs)
+
+
+def _cold_totals(mats, bs, damp, tol, maxiter):
+    iters = mv = 0
+    for i in range(mats.shape[0]):
+        r = lsmr(DenseMatrixOperator(mats[i]), bs[i], damp=damp, tol=tol,
+                 maxiter=maxiter)
+        iters += int(r.info.iterations)
+        mv += int(r.info.matvecs)
+    return iters, mv
+
+
+def _recycled_totals(mats, bs, damp, tol, maxiter, k, ell):
+    seq = solve_sequence_lsmr_jit(
+        mats, bs, k=k, ell=ell, damp=damp,
+        make_operator=DenseMatrixOperator, tol=tol, maxiter=maxiter,
+        refresh_aw="exact",
+    )
+    if not bool(np.all(np.asarray(seq.info.converged))):
+        raise RuntimeError("recycled LSMR failed to converge in bench")
+    return (
+        int(np.sum(np.asarray(seq.info.iterations))),
+        int(np.sum(np.asarray(seq.info.matvecs))),
+    )
+
+
+def run(num=12, m=180, n=120, k=8, ell=48, damp=1e-4, tol=1e-8,
+        maxiter=600):
+    # -- the win regime: slow singular tail, slow drift ------------------
+    for decay in ("logspace", "flat"):
+        mats, bs = _drifting_lsq(num, m, n, decay=decay, drift=0.02)
+        ci, cmv = _cold_totals(mats, bs, damp, tol, maxiter)
+        ri, rmv = _recycled_totals(mats, bs, damp, tol, maxiter, k, ell)
+        save = 100.0 * (cmv - rmv) / cmv
+        log(f"[lsq] {decay}: cold {ci} iters / {cmv} matvecs — "
+            f"deflsmr(k={k}, exact refresh) {ri} iters / {rmv} matvecs "
+            f"({save:+.1f}% products)")
+        emit(f"lsq/{decay}_cold_matvecs", float(cmv),
+             f"iters={ci}")
+        emit(f"lsq/{decay}_recycled_matvecs", float(rmv),
+             f"iters={ri};saved_pct={save:.1f}")
+
+    # -- timed sequence throughput (the scan itself) ---------------------
+    mats, bs = _drifting_lsq(num, m, n, decay="logspace", drift=0.02)
+    _, t_seq = timed(
+        lambda: solve_sequence_lsmr_jit(
+            mats, bs, k=k, ell=ell, damp=damp,
+            make_operator=DenseMatrixOperator, tol=tol, maxiter=maxiter,
+            refresh_aw="exact",
+        ),
+        warmup=1, repeats=3,
+    )
+    emit("lsq/deflsmr_sequence", t_seq * 1e6 / num,
+         f"us_per_system;num={num};m={m};n={n}")
+
+    # -- fused lsmr_update microbench ------------------------------------
+    nn = 1 << 20
+    rng = np.random.default_rng(1)
+    x, hbar, h, v = (
+        jnp.asarray(rng.standard_normal(nn), jnp.float32) for _ in range(4)
+    )
+    c = (0.37, -1.21, 0.83)
+    _, t_ref = timed(
+        lambda: ops.lsmr_update(x, hbar, h, v, *c, impl="reference"),
+        warmup=1, repeats=10,
+    )
+    _, t_chunk = timed(
+        lambda: ops.lsmr_update(x, hbar, h, v, *c, impl="chunked",
+                                block=65536),
+        warmup=1, repeats=10,
+    )
+    bytes_moved = 7 * nn * 4  # 4 reads + 3 writes of f32
+    log(f"[lsq] lsmr_update n={nn}: reference {t_ref*1e6:.0f}us "
+        f"chunked {t_chunk*1e6:.0f}us "
+        f"({bytes_moved/t_chunk/1e9:.1f} GB/s)")
+    emit("lsq/lsmr_update_reference", t_ref * 1e6,
+         f"gbps={bytes_moved/t_ref/1e9:.1f}")
+    emit("lsq/lsmr_update_chunked", t_chunk * 1e6,
+         f"gbps={bytes_moved/t_chunk/1e9:.1f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -20,6 +20,9 @@ Sections:
   serve    — the repro.serve slot pool: throughput + occupancy vs a naive
              per-tenant loop at B ∈ {8, 64} under Poisson arrivals
   hf       — Hessian-free recycling at mini-LM scale
+  lsq      — least-squares axis: recycled vs cold LSMR total A/Aᵀ
+             products (win regime AND the flat-spectrum null result)
+             + the fused lsmr_update recurrence
   kernel   — fused-kernel micro-benchmarks
   roofline — dry-run derived roofline table (if artifacts exist)
 """
@@ -57,6 +60,7 @@ def main() -> None:
         chaos_bench,
         hf_recycle_bench,
         kernel_bench,
+        lsq_bench,
         paper_fig4,
         paper_fig23,
         paper_table1,
@@ -74,6 +78,7 @@ def main() -> None:
     section("batch", batch_bench.run)
     section("serve", serve_bench.run)
     section("hf", hf_recycle_bench.run)
+    section("lsq", lsq_bench.run)
     section("kernel", kernel_bench.run)
 
     art = os.path.join(os.path.dirname(__file__), "../artifacts/dryrun")

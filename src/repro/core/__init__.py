@@ -1,11 +1,14 @@
 """repro.core — the paper's contribution: recycled Krylov solvers for
-sequences of SPD systems, pytree-native and pjit-shardable.
+sequences of related systems, pytree-native and pjit-shardable.
 
 The public front doors are ``solve`` / ``solve_sequence`` / ``solve_batch``
 driven by one ``SolveSpec`` and carrying a ``RecycleState`` (see
-``core/api.py``); the older entry points (``cg``, ``defcg``,
-``RecycleManager``, ``recycled_solve_jit``) remain as host-side
-conveniences and compatibility shims over the same engine.
+``core/api.py``).  The spec's method axis covers both workload families:
+``cg``/``defcg`` for SPD systems and ``lsmr``/``deflsmr`` for regularized
+least-squares (``core/lsmr.py``), all sharing the ``core/engine.py`` loop
+harness.  The older entry points (``cg``, ``defcg``, ``RecycleManager``,
+``recycled_solve_jit``) remain as host-side conveniences and
+compatibility shims over the same engine.
 """
 
 from repro.core.api import (
@@ -24,11 +27,19 @@ from repro.core.api import (
     solve_sequence,
 )
 from repro.core.faults import FaultInjectingOperator, truncate_latest_checkpoint
+from repro.core.lsmr import (
+    lsmr,
+    lsmr_jit,
+    solve_sequence_lsmr,
+    solve_sequence_lsmr_jit,
+)
 from repro.core.operators import (
     DenseMatrixOperator,
+    GaussNewtonOperator,
     GGNOperator,
     KernelSystemOperator,
     LinearOperator,
+    adjoint_matvec,
     apply_to_basis,
     from_callable,
     from_matrix,
@@ -88,10 +99,16 @@ __all__ = [
     "solve_sequence",
     "FaultInjectingOperator",
     "truncate_latest_checkpoint",
+    "lsmr",
+    "lsmr_jit",
+    "solve_sequence_lsmr",
+    "solve_sequence_lsmr_jit",
+    "GaussNewtonOperator",
     "GGNOperator",
     "KernelSystemOperator",
     "DenseMatrixOperator",
     "LinearOperator",
+    "adjoint_matvec",
     "apply_to_basis",
     "from_callable",
     "from_matrix",

@@ -8,7 +8,8 @@ preconditioner, and five entry points each re-declared overlapping kwargs
 with drifting defaults.  This module makes the combination declarative:
 
 * :class:`SolveSpec` — a frozen, hashable description of *how* to solve
-  (method, deflation sizes, tolerances, preconditioner strategy).  It is
+  (method axis ``cg``/``defcg``/``lsmr``/``deflsmr``, deflation sizes,
+  tolerances, preconditioner strategy, least-squares shift).  It is
   the single source of truth for solver configuration: every default
   (``waw_jitter`` included) lives here or in the constant it re-exports,
   and the spec passes through ``jit`` as a static argument.
@@ -24,9 +25,9 @@ Front doors (everything else is a compatibility shim over these):
   returns the next ``RecycleState``.  Fully traceable: no host syncs, so
   it jits (``solve_jit``), vmaps, and pjit-shards.
 * :func:`solve_sequence` — N related systems as ONE ``lax.scan`` (the
-  device-resident sequence engine), now spec-driven and preconditionable.
-  Legacy ``(W0, AW0, k=, ell=)`` calls are forwarded with a
-  ``DeprecationWarning``.
+  device-resident sequence engine), spec-driven and preconditionable;
+  ``method="deflsmr"`` runs the same scan over regularized least-squares
+  systems with normal-equations recycling geometry.
 * :func:`solve_batch` — B independent tenants (systems or sequences)
   under one ``vmap``: one compiled program serves every tenant, each with
   its own ``RecycleState`` and convergence flag (``info.converged`` is
@@ -37,12 +38,12 @@ Front doors (everything else is a compatibility shim over these):
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import lsmr as lsmr_mod
 from repro.core import preconditioners as precond_mod
 from repro.core import pytree as pt
 from repro.core import recycle as recycle_mod
@@ -58,7 +59,10 @@ from repro.core.strategies import (
 
 Pytree = Any
 
-_METHODS = ("cg", "defcg")
+_METHODS = ("cg", "defcg", "lsmr", "deflsmr")
+# The least-squares half of the method axis: plain and recycled LSMR on
+# min ‖Ax − b‖² + lsq_shift·‖x‖² (rectangular A; see repro.core.lsmr).
+_LSQ_METHODS = ("lsmr", "deflsmr")
 _SELECTS = ("largest", "smallest")
 _REFRESH_MODES = ("exact", "stale")
 _PRECONDS = ("none", "jacobi", "nystrom", "custom")
@@ -77,8 +81,17 @@ class SolveSpec:
     argument instead of a dozen drifting kwargs.  Field semantics:
 
     Attributes:
-      method: ``"cg"`` (no deflation; ``k``/``ell`` ignored) or
-        ``"defcg"`` (deflated CG with harmonic-Ritz recycling).
+      method: the solver axis (DESIGN.md §12).  ``"cg"`` (no deflation;
+        ``k``/``ell`` ignored) or ``"defcg"`` (deflated CG with
+        harmonic-Ritz recycling) for SPD systems; ``"lsmr"`` (plain) or
+        ``"deflsmr"`` (recycled, deflated in the normal-equations
+        geometry) for regularized least-squares ``min ‖Ax − b‖² +
+        lsq_shift·‖x‖²`` with rectangular ``A`` — see
+        :mod:`repro.core.lsmr`.  The least-squares methods converge on
+        the normal residual ``‖Âᵀr̂‖``, take no preconditioner, use the
+        default :class:`HarmonicRitz` extraction only, and ignore the
+        recovery ladder (LSMR has no SPD breakdown modes; a non-finite
+        solve retires the basis and re-bootstraps instead).
       k: recycled subspace size (rows of ``RecycleState.W``).
       ell: leading ``(p, Ap)`` pairs recorded per solve for extraction.
       tol, atol, maxiter: convergence controls — stop when
@@ -130,6 +143,10 @@ class SolveSpec:
         iterations stops with STAGNATED status (and, with recovery
         armed, climbs the ladder) instead of burning the rest of
         ``maxiter``.  0 (default) adds no loop state and no checks.
+      lsq_shift: the ridge λ ≥ 0 of the least-squares methods (static —
+        it selects the augmented-block code path at trace time; 0 solves
+        ordinary least squares).  Rejected for the SPD methods, whose
+        operators carry their own shift.
     """
 
     method: str = "defcg"
@@ -148,6 +165,7 @@ class SolveSpec:
     recovery_rungs: int = 3
     recovery_shift: float = 1e-6
     stagnation_window: int = 0
+    lsq_shift: float = 0.0
 
     def __post_init__(self):
         if self.method not in _METHODS:
@@ -162,8 +180,31 @@ class SolveSpec:
             raise ValueError(
                 f"precond must be one of {_PRECONDS}, got {self.precond!r}"
             )
-        if self.method == "defcg" and self.k < 1:
-            raise ValueError(f"defcg needs k >= 1, got k={self.k}")
+        if self.method in ("defcg", "deflsmr") and self.k < 1:
+            raise ValueError(f"{self.method} needs k >= 1, got k={self.k}")
+        if self.lsq_shift < 0:
+            raise ValueError(
+                f"lsq_shift must be >= 0, got {self.lsq_shift}"
+            )
+        if self.lsq_shift != 0.0 and self.method not in _LSQ_METHODS:
+            raise ValueError(
+                f"lsq_shift is the ridge λ of the least-squares methods "
+                f"{_LSQ_METHODS}; method={self.method!r} ignores it — SPD "
+                "operators carry their own shift"
+            )
+        if self.method in _LSQ_METHODS:
+            if self.precond != "none":
+                raise ValueError(
+                    f"method={self.method!r} has no preconditioner path — "
+                    "LSMR's geometry is fixed by the augmented operator; "
+                    "use precond='none'"
+                )
+            if type(self.strategy) is not HarmonicRitz:
+                raise ValueError(
+                    f"method={self.method!r} extracts through the shared "
+                    "harmonic-Ritz core only — custom strategies are "
+                    "def-CG policies"
+                )
         if self.ell < 0 or self.maxiter < 1 or self.precond_rank < 1:
             raise ValueError("ell >= 0, maxiter >= 1, precond_rank >= 1 required")
         if self.tol < 0 or self.atol < 0 or self.waw_jitter < 0:
@@ -352,10 +393,14 @@ def solve(
     :func:`make_preconditioner`); deflation composes with it through the
     split-preconditioned iteration of :func:`repro.core.solvers.defcg`.
 
-    ``method="cg"`` neither consumes nor updates recycle state: a
-    supplied ``state`` passes through UNTOUCHED (not validated, counter
-    not bumped) so a mixed cg/defcg pipeline can thread one state
-    through both.
+    ``method="cg"`` and ``method="lsmr"`` neither consume nor update
+    recycle state: a supplied ``state`` passes through UNTOUCHED (not
+    validated, counter not bumped) so a mixed pipeline can thread one
+    state through both.  The least-squares methods accept rectangular
+    ``A`` (adjoint via ``rmatvec``; ``b`` lives in the range space, the
+    solution in the domain) and solve ``min ‖Ax − b‖² +
+    spec.lsq_shift·‖x‖²`` — ``info.residual_norm`` is then the normal
+    residual ``‖Âᵀr̂‖``, the quantity LSMR converges on.
 
     Accounting: ``info.matvecs`` includes whatever refresh the spec's
     strategy spent (k operator applications for an exact refresh with a
@@ -368,6 +413,76 @@ def solve(
     """
     spec = SolveSpec() if spec is None else spec
     _check_m(spec, M)
+
+    if spec.method in _LSQ_METHODS:
+        if M is not None:
+            raise ValueError(
+                f"method={spec.method!r} takes no preconditioner apply"
+            )
+        if spec.method == "lsmr":
+            res = lsmr_mod.lsmr(
+                A,
+                b,
+                x0,
+                damp=spec.lsq_shift,
+                tol=spec.tol,
+                atol=spec.atol,
+                maxiter=spec.maxiter,
+                record_residuals=record_residuals,
+                batch_axis=batch_axis,
+                stagnation_window=spec.stagnation_window,
+            )
+            return SolveResult(
+                x=res.x,
+                info=res.info,
+                state=state,
+                report=_make_report(res.info, 0),
+            )
+        # deflsmr: the recycled basis lives in the DOMAIN space, whose
+        # dimension a rectangular system's b cannot reveal — probe the
+        # adjoint (zero cost) instead.
+        x_tmpl = x0 if x0 is not None else lsmr_mod._domain_template(A, b)
+        x_flat_t, unravel_x = pt.ravel_vector(x_tmpl)
+        n = x_flat_t.shape[0]
+        if state is None:
+            state = RecycleState.zeros(spec.k, n, x_flat_t.dtype)
+        if state.W.ndim != 2 or state.W.shape != (spec.k, n):
+            raise ValueError(
+                f"state.W has shape {state.W.shape}; spec(k={spec.k}) over "
+                f"this system's domain needs ({spec.k}, {n}) — state and "
+                "spec must agree"
+            )
+        x, info, w2, nw2, theta, rung = lsmr_mod._one_recycled_lsmr(
+            A,
+            b,
+            x0,
+            state.W,
+            state.AW,
+            unravel_x,
+            k=spec.k,
+            ell=spec.ell,
+            damp=spec.lsq_shift,
+            tol=spec.tol,
+            atol=spec.atol,
+            maxiter=spec.maxiter,
+            select=spec.select,
+            waw_jitter=spec.waw_jitter,
+            refresh_aw=spec.refresh_aw,
+            record_residuals=record_residuals,
+            batch_axis=batch_axis,
+            stagnation_window=spec.stagnation_window,
+        )
+        new_state = RecycleState(
+            W=w2,
+            AW=nw2,  # the AW slot carries NW = (AᵀA + λI)W for deflsmr
+            theta=state.theta if theta is None else theta,
+            systems_solved=state.systems_solved + 1,
+            drift=state.drift,
+        )
+        return SolveResult(
+            x=x, info=info, state=new_state,
+            report=_make_report(info, rung),
+        )
 
     if spec.method == "cg":
         res = solvers_mod.cg(
@@ -461,11 +576,11 @@ def _solve_sequence_spec(
     batch_axis: Optional[str] = None,
     x_prev0: Optional[jnp.ndarray] = None,
 ) -> SequenceSolveResult:
-    if spec.method != "defcg":
+    if spec.method not in ("defcg", "deflsmr"):
         raise ValueError(
             "solve_sequence recycles a deflation basis — it needs "
-            f"spec.method='defcg', got {spec.method!r} (for plain CG over "
-            "independent systems use solve_batch)"
+            f"spec.method='defcg' or 'deflsmr', got {spec.method!r} (for "
+            "plain CG/LSMR over independent systems use solve_batch)"
         )
     if spec.precond != "none" and make_preconditioner is None:
         raise ValueError(
@@ -473,6 +588,28 @@ def _solve_sequence_spec(
             "passed — the sequence path builds M per system, so supply a "
             "factory mapping each operator to its preconditioner apply"
         )
+    if spec.method == "deflsmr":
+        seq = lsmr_mod.solve_sequence_lsmr(
+            systems,
+            b_seq,
+            state0.W if state0 is not None else None,
+            state0.AW if state0 is not None else None,
+            k=spec.k,
+            ell=spec.ell,
+            damp=spec.lsq_shift,
+            make_operator=make_operator,
+            tol=spec.tol,
+            atol=spec.atol,
+            maxiter=spec.maxiter,
+            select=spec.select,
+            waw_jitter=spec.waw_jitter,
+            refresh_aw=spec.refresh_aw,
+            carry_x=carry_x,
+            batch_axis=batch_axis,
+            stagnation_window=spec.stagnation_window,
+            x_prev0=x_prev0,
+        )
+        return _finish_sequence(seq, spec, state0, b_seq)
     seq = recycle_mod.solve_sequence(
         systems,
         b_seq,
@@ -499,6 +636,18 @@ def _solve_sequence_spec(
         stagnation_window=spec.stagnation_window,
         x_prev0=x_prev0,
     )
+    return _finish_sequence(seq, spec, state0, b_seq)
+
+
+def _finish_sequence(
+    seq: SequenceResult,
+    spec: SolveSpec,
+    state0: Optional[RecycleState],
+    b_seq: Pytree,
+) -> SequenceSolveResult:
+    """Fold an engine ``SequenceResult`` into the front door's return
+    shape — shared by the def-CG and deflsmr sequence paths (for the
+    latter, the ``AW`` slot carries the normal-operator products)."""
     num_systems = jax.tree_util.tree_leaves(b_seq)[0].shape[0]
     solved0 = (
         state0.systems_solved if state0 is not None else jnp.int32(0)
@@ -579,9 +728,22 @@ def _solve_sequence_chunked(
     """
     num_systems = jax.tree_util.tree_leaves(b_seq)[0].shape[0]
     b0 = jax.tree_util.tree_map(lambda l: l[0], b_seq)
-    b0_flat, unravel = pt.ravel_vector(b0)
-    n = b0_flat.shape[0]
-    dtype = b0_flat.dtype
+    if spec.method == "deflsmr":
+        # Rectangular systems: the carried basis and solution live in
+        # the DOMAIN space — probe the first operator's adjoint.
+        make_op = (
+            make_operator if make_operator is not None else (lambda s: s)
+        )
+        A0 = make_op(jax.tree_util.tree_map(lambda l: l[0], systems))
+        x0_flat, unravel = pt.ravel_vector(
+            lsmr_mod._domain_template(A0, b0)
+        )
+        n = x0_flat.shape[0]
+        dtype = x0_flat.dtype
+    else:
+        b0_flat, unravel = pt.ravel_vector(b0)
+        n = b0_flat.shape[0]
+        dtype = b0_flat.dtype
     if state0 is None:
         state0 = RecycleState.zeros(spec.k, n, dtype)
 
@@ -683,9 +845,8 @@ def solve_sequence(
     checkpoint=None,
     checkpoint_every: int = 0,
     resume: bool = False,
-    **legacy,
 ):
-    """Solve a sequence of related SPD systems on-device, spec-driven.
+    """Solve a sequence of related systems on-device, spec-driven.
 
     ``solve_sequence(systems, b_seq, spec, state0)`` is the front door:
     one ``lax.scan`` carries the :class:`RecycleState` across systems
@@ -703,40 +864,25 @@ def solve_sequence(
     checkpoint; a killed-and-resumed run reproduces the uninterrupted
     run's iterates exactly.
 
-    Legacy calls — ``solve_sequence(systems, b_seq, W0, AW0, k=…,
-    ell=…, …)`` — are forwarded to the engine unchanged (same
-    ``SequenceResult`` return) with a ``DeprecationWarning``.
+    ``spec.method`` selects the engine: ``"defcg"`` (SPD systems) or
+    ``"deflsmr"`` (regularized least-squares, normal-equations
+    recycling geometry).  The PR-3-era positional ``(W0, AW0, k=…,
+    ell=…)`` signature has been removed — seed the basis through
+    ``state0=RecycleState(W=…, AW=…, …)`` instead.
     """
-    if isinstance(spec, SolveSpec) or (spec is None and not legacy):
-        if legacy:
-            raise TypeError(
-                f"unexpected keyword arguments with a SolveSpec: "
-                f"{sorted(legacy)} — fold them into the spec"
-            )
-        if checkpoint is not None:
-            if checkpoint_every < 1:
-                raise ValueError(
-                    "checkpoint= needs checkpoint_every >= 1 (systems per "
-                    f"chunk), got {checkpoint_every}"
-                )
-            return _solve_sequence_chunked(
-                systems,
-                b_seq,
-                SolveSpec() if spec is None else spec,
-                state0,
-                make_operator=make_operator,
-                make_preconditioner=make_preconditioner,
-                carry_x=carry_x,
-                divergence_fallback=divergence_fallback,
-                checkpoint=checkpoint,
-                checkpoint_every=checkpoint_every,
-                resume=resume,
-            )
-        if resume or checkpoint_every:
+    if spec is not None and not isinstance(spec, SolveSpec):
+        raise TypeError(
+            "solve_sequence(systems, b, W0, AW0, k=..., ell=...) was "
+            "removed; pass solve_sequence(systems, b, SolveSpec(k=..., "
+            "ell=...), state0=RecycleState(W=..., AW=..., ...))"
+        )
+    if checkpoint is not None:
+        if checkpoint_every < 1:
             raise ValueError(
-                "resume=/checkpoint_every= need checkpoint=<CheckpointManager>"
+                "checkpoint= needs checkpoint_every >= 1 (systems per "
+                f"chunk), got {checkpoint_every}"
             )
-        return _solve_sequence_spec(
+        return _solve_sequence_chunked(
             systems,
             b_seq,
             SolveSpec() if spec is None else spec,
@@ -745,32 +891,23 @@ def solve_sequence(
             make_preconditioner=make_preconditioner,
             carry_x=carry_x,
             divergence_fallback=divergence_fallback,
+            checkpoint=checkpoint,
+            checkpoint_every=checkpoint_every,
+            resume=resume,
         )
-    # Legacy signature: (systems, b_seq, W0, AW0, *, k, ell, ...) — W0/AW0
-    # may arrive positionally (in the spec/state0 slots) or by keyword.
-    if checkpoint is not None or resume or checkpoint_every:
+    if resume or checkpoint_every:
         raise ValueError(
-            "checkpoint=/checkpoint_every=/resume= require the SolveSpec "
-            "signature: solve_sequence(systems, b, SolveSpec(...), state0)"
+            "resume=/checkpoint_every= need checkpoint=<CheckpointManager>"
         )
-    warnings.warn(
-        "solve_sequence(systems, b, W0, AW0, k=..., ell=...) is deprecated; "
-        "use solve_sequence(systems, b, SolveSpec(k=..., ell=...), state0)",
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    w0 = legacy.pop("W0", spec)
-    aw0 = legacy.pop("AW0", state0)
-    return recycle_mod.solve_sequence(
+    return _solve_sequence_spec(
         systems,
         b_seq,
-        w0,
-        aw0,
+        SolveSpec() if spec is None else spec,
+        state0,
         make_operator=make_operator,
         make_preconditioner=make_preconditioner,
         carry_x=carry_x,
         divergence_fallback=divergence_fallback,
-        **legacy,
     )
 
 
@@ -827,8 +964,10 @@ def solve_batch(
     make_op = make_operator if make_operator is not None else (lambda s: s)
 
     if sequence:
-        if spec.method != "defcg":
-            raise ValueError("sequence=True requires spec.method='defcg'")
+        if spec.method not in ("defcg", "deflsmr"):
+            raise ValueError(
+                "sequence=True requires spec.method='defcg' or 'deflsmr'"
+            )
 
         def one_seq(sys_i, b_i, st_i):
             res = _solve_sequence_spec(
@@ -844,13 +983,16 @@ def solve_batch(
             return res.x, res.info, res.state, res.report
 
         if state is None:
-            state = _batched_zero_state(b_batch, spec, axes=2)
+            state = _batched_zero_state(
+                b_batch, spec, axes=2,
+                systems=systems, make_operator=make_operator,
+            )
         x, info, state_out, report = jax.vmap(
             one_seq, axis_name=_TENANT_AXIS
         )(systems, b_batch, state)
         return BatchSolveResult(x=x, info=info, state=state_out, report=report)
 
-    if spec.method == "cg":
+    if spec.method in ("cg", "lsmr"):
 
         def one_cg(sys_i, b_i):
             A = make_op(sys_i)
@@ -862,7 +1004,7 @@ def solve_batch(
             res = solve(A, b_i, spec, None, M=M)
             return res.x, res.info, res.report
 
-        # Plain CG neither consumes nor updates recycle state — a
+        # Plain CG/LSMR neither consume nor update recycle state — a
         # caller-supplied batched state passes through untouched (same
         # contract as solve()).
         x, info, report = jax.vmap(one_cg)(systems, b_batch)
@@ -882,7 +1024,10 @@ def solve_batch(
         return res.x, res.info, res.state, res.report
 
     if state is None:
-        state = _batched_zero_state(b_batch, spec, axes=1)
+        state = _batched_zero_state(
+            b_batch, spec, axes=1,
+            systems=systems, make_operator=make_operator,
+        )
     x, info, state_out, report = jax.vmap(one, axis_name=_TENANT_AXIS)(
         systems, b_batch, state
     )
@@ -890,13 +1035,34 @@ def solve_batch(
 
 
 def _batched_zero_state(
-    b_batch: Pytree, spec: SolveSpec, axes: int
+    b_batch: Pytree,
+    spec: SolveSpec,
+    axes: int,
+    *,
+    systems: Any = None,
+    make_operator: Optional[Callable[[Any], Any]] = None,
 ) -> RecycleState:
-    """Cold per-tenant states: leading B axis over RecycleState.zeros."""
+    """Cold per-tenant states: leading B axis over RecycleState.zeros.
+
+    For the least-squares methods the basis dimension is the DOMAIN
+    size, which ``b`` (range space) cannot reveal — one tenant's
+    operator adjoint is probed (``eval_shape``, zero cost) instead.
+    """
     leaves = jax.tree_util.tree_leaves(b_batch)
     B = leaves[0].shape[0]
     b0 = jax.tree_util.tree_map(lambda l: l[(0,) * axes], b_batch)
-    b0_flat, _ = pt.ravel_vector(b0)
+    if spec.method in _LSQ_METHODS:
+        make_op = (
+            make_operator if make_operator is not None else (lambda s: s)
+        )
+        A0 = make_op(
+            jax.tree_util.tree_map(lambda l: l[(0,) * axes], systems)
+        )
+        b0_flat, _ = pt.ravel_vector(
+            lsmr_mod._domain_template(A0, b0)
+        )
+    else:
+        b0_flat, _ = pt.ravel_vector(b0)
     n = b0_flat.shape[0]
     dtype = b0_flat.dtype
     return RecycleState(
@@ -974,13 +1140,16 @@ def solve_pool_step(
     one-hot — so the fast path is an optimization, not a semantic fork.
     """
     spec = SolveSpec() if spec is None else spec
-    if spec.method != "defcg":
+    if spec.method not in ("defcg", "deflsmr"):
         raise ValueError(
             "solve_pool_step carries per-slot RecycleState — it needs "
-            f"spec.method='defcg', got {spec.method!r}"
+            f"spec.method='defcg' or 'deflsmr', got {spec.method!r}"
         )
     if state is None:
-        state = _batched_zero_state(b_batch, spec, axes=1)
+        state = _batched_zero_state(
+            b_batch, spec, axes=1,
+            systems=systems, make_operator=make_operator,
+        )
     active = jnp.asarray(active, bool)
     b_masked = jax.tree_util.tree_map(
         lambda l: jnp.where(_slot_bcast(active, l), l, jnp.zeros_like(l)),

@@ -35,7 +35,8 @@ Matvec = Callable[[Pytree], Pytree]
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class LinearOperator:
-    """A symmetric (PSD in intended use) linear operator ``v ↦ A v``.
+    """A linear operator ``v ↦ A v`` — symmetric by default, rectangular
+    when an adjoint is supplied.
 
     Attributes:
       matvec: the matvec closure.  Must be pure and jit-compatible.
@@ -45,17 +46,38 @@ class LinearOperator:
         ``(n, r)`` arrays (array-vector operators only).  When present,
         :func:`apply_to_basis` refreshes a whole recycled basis in one
         operator application instead of r sequential matvecs.
+      rmatvec: optional adjoint closure ``u ↦ Aᵀ u``.  ``None`` declares
+        the operator SYMMETRIC (the historical contract of this repo:
+        every SPD solve path assumes it), in which case :attr:`T` is the
+        operator itself.  Supplying it opens the rectangular / least-
+        squares workload: LSMR touches ``A`` only through
+        ``matvec``/``rmatvec`` pairs.
     """
 
     matvec: Matvec
     matvec_cost_flops: Optional[float] = None
     matmat: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None
+    rmatvec: Optional[Matvec] = None
 
     def __call__(self, v: Pytree) -> Pytree:
         return self.matvec(v)
 
     def __matmul__(self, v: Pytree) -> Pytree:
         return self.matvec(v)
+
+    @property
+    def T(self) -> "LinearOperator":
+        """The adjoint operator ``u ↦ Aᵀ u``.
+
+        Symmetric operators (``rmatvec is None``) are their own adjoint;
+        rectangular ones get a fresh operator with the closures swapped,
+        so ``op.T.T`` round-trips.
+        """
+        if self.rmatvec is None:
+            return self
+        return LinearOperator(
+            self.rmatvec, self.matvec_cost_flops, None, self.matvec
+        )
 
     def basis_matvec(self, basis: Pytree) -> Pytree:
         """``A`` applied to every vector of a stacked basis (leading axis).
@@ -69,7 +91,7 @@ class LinearOperator:
 
     # -- composition ------------------------------------------------------
     def shifted(self, sigma) -> "LinearOperator":
-        """``A + sigma I``."""
+        """``A + sigma I`` (square operators only)."""
 
         def mv(v, base=self.matvec):
             return pt.tree_axpy(sigma, v, base(v))
@@ -80,7 +102,13 @@ class LinearOperator:
             def mm(vs, base=self.matmat):
                 return base(vs) + sigma * vs
 
-        return LinearOperator(mv, self.matvec_cost_flops, mm)
+        rmv = None
+        if self.rmatvec is not None:
+
+            def rmv(u, base=self.rmatvec):
+                return pt.tree_axpy(sigma, u, base(u))
+
+        return LinearOperator(mv, self.matvec_cost_flops, mm, rmv)
 
     def scaled(self, c) -> "LinearOperator":
         def mv(v, base=self.matvec):
@@ -92,7 +120,13 @@ class LinearOperator:
             def mm(vs, base=self.matmat):
                 return c * base(vs)
 
-        return LinearOperator(mv, self.matvec_cost_flops, mm)
+        rmv = None
+        if self.rmatvec is not None:
+
+            def rmv(u, base=self.rmatvec):
+                return pt.tree_scale(c, base(u))
+
+        return LinearOperator(mv, self.matvec_cost_flops, mm, rmv)
 
     def __add__(self, other: "LinearOperator") -> "LinearOperator":
         def mv(v, a=self.matvec, b=other.matvec):
@@ -107,11 +141,17 @@ class LinearOperator:
             def mm(vs, a=self.matmat, b=other.matmat):
                 return a(vs) + b(vs)
 
-        return LinearOperator(mv, cost, mm)
+        rmv = None
+        if self.rmatvec is not None and other.rmatvec is not None:
+
+            def rmv(u, a=self.rmatvec, b=other.rmatvec):
+                return pt.tree_add(a(u), b(u))
+
+        return LinearOperator(mv, cost, mm, rmv)
 
     # -- pytree protocol ---------------------------------------------------
     def tree_flatten(self):
-        return (), (self.matvec, self.matvec_cost_flops, self.matmat)
+        return (), (self.matvec, self.matvec_cost_flops, self.matmat, self.rmatvec)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -121,7 +161,7 @@ class LinearOperator:
 
 @jax.tree_util.register_pytree_node_class
 class DenseMatrixOperator(LinearOperator):
-    """Dense SPD matrix as an operator — with the matrix as a pytree LEAF.
+    """Dense matrix as an operator — with the matrix as a pytree LEAF.
 
     The base :class:`LinearOperator` flattens with zero children (its
     closures are aux data), which is right for opaque callables but
@@ -131,6 +171,11 @@ class DenseMatrixOperator(LinearOperator):
     this).  Here the matrix is the child — two operators over same-shape
     matrices share one trace, vmap batches over a stacked leading axis,
     and the matrix shards like any other array.
+
+    Rectangular ``(m, n)`` matrices are supported: ``matvec`` maps
+    ``(n,) → (m,)`` and :attr:`rmatvec`/:attr:`T` apply ``matᵀ`` —
+    which is what the LSMR front door consumes.  Square SPD usage is
+    unchanged (the SPD solvers never call ``rmatvec``).
     """
 
     def __init__(self, mat: jnp.ndarray):
@@ -138,14 +183,21 @@ class DenseMatrixOperator(LinearOperator):
         # Unflatten may pass non-array sentinels (treedef manipulation);
         # the matvec is never called on those, but __init__ must survive.
         shape = getattr(mat, "shape", None)
-        n = shape[-1] if shape else 0
+        m, n = (shape[-2], shape[-1]) if shape and len(shape) >= 2 else (0, 0)
 
         def mv(v):
             return mat @ v
 
+        def rmv(u):
+            return jnp.swapaxes(mat, -2, -1) @ u
+
         LinearOperator.__init__(
-            self, mv, matvec_cost_flops=2.0 * n * n, matmat=mv
+            self, mv, matvec_cost_flops=2.0 * m * n, matmat=mv, rmatvec=rmv
         )
+
+    @property
+    def T(self) -> "DenseMatrixOperator":
+        return DenseMatrixOperator(jnp.swapaxes(self.mat, -2, -1))
 
     def tree_flatten(self):
         return (self.mat,), None
@@ -301,6 +353,84 @@ class GGNOperator:
         params, damping = children
         model_fn, loss_hvp, cost = aux
         return cls(model_fn, loss_hvp, params, damping, cost)
+
+
+# ---------------------------------------------------------------------------
+# Gauss-Newton Jacobian operator — the rectangular least-squares workhorse
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class GaussNewtonOperator:
+    """The Jacobian ``J`` of a residual map as a rectangular operator.
+
+    ``residual_fn(params) -> residuals`` is the model's residual map
+    (e.g. ``predictions − targets``); the operator exposes the two
+    products LSMR consumes:
+
+    * ``matvec(v) = J v`` — one ``jvp`` through the residual map;
+    * ``rmatvec(u) = Jᵀ u`` — one ``vjp``.
+
+    Solving ``min ‖J δ + r‖² + λ‖δ‖²`` with :func:`repro.core.lsmr.lsmr`
+    is the TRUE Gauss-Newton step — unlike :class:`GGNOperator` (which
+    squares ``J`` into ``JᵀH_LJ`` and hands an SPD system to CG), the
+    least-squares path never forms the normal-equations operator, so its
+    conditioning is κ(J), not κ(J)².  Domain is the params pytree, range
+    the residual pytree — both cross the flat engine through their own
+    ravel/unravel pair.
+    """
+
+    residual_fn: Callable[[Pytree], Pytree]
+    params: Pytree
+    matvec_cost_flops: Optional[float] = None
+
+    def matvec(self, v: Pytree) -> Pytree:
+        return jax.jvp(self.residual_fn, (self.params,), (v,))[1]
+
+    def rmatvec(self, u: Pytree) -> Pytree:
+        _, vjp_fn = jax.vjp(self.residual_fn, self.params)
+        (jtv,) = vjp_fn(u)
+        return jtv
+
+    def residuals(self) -> Pytree:
+        """``r(params)`` — the right-hand side is ``−r`` for a GN step."""
+        return self.residual_fn(self.params)
+
+    @property
+    def T(self) -> LinearOperator:
+        return LinearOperator(
+            self.rmatvec, self.matvec_cost_flops, None, self.matvec
+        )
+
+    def __call__(self, v):
+        return self.matvec(v)
+
+    def __matmul__(self, v):
+        return self.matvec(v)
+
+    def tree_flatten(self):
+        return (self.params,), (self.residual_fn, self.matvec_cost_flops)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        (params,) = children
+        residual_fn, cost = aux
+        return cls(residual_fn, params, cost)
+
+
+def adjoint_matvec(op) -> Matvec:
+    """The ``u ↦ Aᵀ u`` closure of ``op``.
+
+    Operators without an ``rmatvec`` are symmetric by this repo's
+    contract (every SPD solve path already relies on it), so their
+    adjoint is their own matvec.  This is the single place the LSMR
+    engine resolves adjoints through.
+    """
+    rmv = getattr(op, "rmatvec", None)
+    if rmv is not None:
+        return rmv
+    return op.matvec if hasattr(op, "matvec") else op
 
 
 def materialize(op, template: Pytree) -> jnp.ndarray:

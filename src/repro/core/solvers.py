@@ -8,9 +8,13 @@ conjugate gradient) as a jit-able, pytree-native, shardable solver:
   its pytree once (``pt.ravel_vector``), iterates on flat state, and
   unpacks once at exit (the flat-engine fast path, DESIGN.md §8);
 * ``A`` is any matrix-free operator (``repro.core.operators``);
-* the main iteration is a ``jax.lax.while_loop`` so the entire solve — and
-  therefore an entire Hessian-free optimizer step that embeds it — lowers
-  to a single XLA computation that pjit can shard across a pod;
+* the main iteration is driven by the method-agnostic harness
+  (:mod:`repro.core.engine`): CG and def-CG supply only their per-method
+  ``step``/``state`` contract, while the harness owns tolerance
+  resolution, breakdown classification, stagnation tracking, the
+  recording scan + while-loop split, and the vmap-aware matvec gate —
+  the whole solve lowers to a single XLA computation that pjit can shard
+  across a pod;
 * the non-matvec vector work of an iteration lowers to two fused passes
   (``repro.kernels.ops.fused_cg_update`` / ``fused_deflate_direction``:
   Pallas kernels on TPU, fused-jnp elsewhere) instead of ~8 separate HBM
@@ -44,8 +48,13 @@ import jax
 import jax.numpy as jnp
 from jax.scipy.linalg import cho_factor, cho_solve
 
+from repro.core import engine
 from repro.core import operators as ops_mod
 from repro.core import pytree as pt
+from repro.core.engine import (  # noqa: F401  (re-exported API surface)
+    SolveInfo,
+    SolveStatus,
+)
 from repro.kernels import ops as kops
 
 Pytree = Any
@@ -65,88 +74,14 @@ DEFAULT_WAW_JITTER = 1e-12
 # guard and every strategy-layer comparison (``repro.core.strategies``).
 DRIFT_NOISE_FLOOR_EPS = 500.0
 
-# Stagnation test: a new best residual must beat the previous best by at
-# least this factor to count as progress.  CG on a hard-but-healthy system
-# keeps shaving the residual (1% over `stagnation_window` iterations is a
-# very low bar); a solve that is looping on a poisoned recurrence does not.
-_STAGNATION_RTOL = 0.99
-
-
-class SolveStatus:
-    """Enumerated terminal status of an iterative solve.
-
-    Plain int32 codes (not a Python enum) so they live inside jitted loop
-    state and ``jnp.where`` selections.  ``0``/``1`` are the healthy exits;
-    anything ``>= BREAKDOWN_NONFINITE`` means the iteration was cut short
-    by a detected numerical failure and the recovery ladder
-    (``repro.core.recycle``) may have re-solved.
-    """
-
-    CONVERGED = 0  # ‖r‖ ≤ max(tol·‖b‖, atol)
-    MAXITER = 1  # iteration budget exhausted, no breakdown detected
-    BREAKDOWN_NONFINITE = 2  # NaN/Inf in pᵀAp or ‖r‖ (poisoned matvec/basis)
-    BREAKDOWN_INDEFINITE = 3  # pᵀAp ≤ 0: operator not SPD along p
-    STAGNATED = 4  # residual stalled for `stagnation_window` iters, or diverged
-
-    _NAMES = {
-        0: "CONVERGED",
-        1: "MAXITER",
-        2: "BREAKDOWN_NONFINITE",
-        3: "BREAKDOWN_INDEFINITE",
-        4: "STAGNATED",
-    }
-
-    @classmethod
-    def describe(cls, code) -> str:
-        """Host-side pretty-printer for a (concrete) status code."""
-        return cls._NAMES.get(int(code), f"UNKNOWN({int(code)})")
-
-
-def _classify_breakdown(d, rnorm, diverged_at):
-    """Fold breakdown detection into the pᵀAp reduction already computed.
-
-    Returns ``(bad, code)``: ``bad`` flags this iteration as broken and
-    ``code`` is the int32 :class:`SolveStatus` cause (0 when healthy).
-    Explosive residual growth (past the ``diverged_at`` ceiling) is
-    classed as STAGNATED — "stopped converging" covers both stalling and
-    running away; the non-finite/indefinite codes are reserved for
-    detections at the reduction itself.
-    """
-    nonfinite = ~jnp.isfinite(d)
-    indefinite = (~nonfinite) & (d <= 0.0)
-    diverging = rnorm > diverged_at
-    bad = nonfinite | indefinite | diverging
-    code = jnp.where(
-        nonfinite,
-        SolveStatus.BREAKDOWN_NONFINITE,
-        jnp.where(
-            indefinite,
-            SolveStatus.BREAKDOWN_INDEFINITE,
-            SolveStatus.STAGNATED,
-        ),
-    )
-    return bad, jnp.where(bad, code, 0).astype(jnp.int32)
-
-
-def _exit_status(converged, fail):
-    return jnp.where(
-        converged,
-        SolveStatus.CONVERGED,
-        jnp.where(fail > 0, fail, SolveStatus.MAXITER),
-    ).astype(jnp.int32)
-
-
-class SolveInfo(NamedTuple):
-    """Diagnostics of an iterative solve (all traced values)."""
-
-    iterations: jax.Array  # int32: CG iterations executed
-    converged: jax.Array  # bool
-    residual_norm: jax.Array  # final ‖r‖
-    matvecs: jax.Array  # total operator applications
-    residual_norms: Optional[jax.Array] = None  # (maxiter+1,) trace or None
-    breakdown: jax.Array | bool = False  # any in-loop breakdown detected
-    status: jax.Array | int = 0  # int32 SolveStatus code of the terminal exit
-    guard_fired: jax.Array | bool = False  # in-solve stale_guard refreshed AW
+# Backwards-compatible aliases: the loop scaffolding moved to
+# repro.core.engine (the method-agnostic harness); these names stay
+# importable from here because recycle/api/serve grew up against them.
+_STAGNATION_RTOL = engine.STAGNATION_RTOL
+_classify_breakdown = engine.classify_breakdown
+_exit_status = engine.exit_status
+_tolerances = engine.tolerances
+_flat_operator = engine.flat_operator
 
 
 class RecycleData(NamedTuple):
@@ -178,20 +113,6 @@ class CGResult(NamedTuple):
     x: Pytree
     info: SolveInfo
     recycle: Optional[RecycleData] = None
-
-
-def _tolerances(b, tol, atol):
-    bnorm = pt.tree_norm(b)
-    return jnp.maximum(tol * bnorm, atol), bnorm
-
-
-def _flat_operator(op, unravel):
-    """Lift a pytree matvec/preconditioner to flat ``(n,)`` vectors."""
-
-    def mv(v_flat):
-        return pt.ravel(op(unravel(v_flat)))
-
-    return mv
 
 
 # ---------------------------------------------------------------------------
@@ -230,33 +151,32 @@ def cg(
     """
     b_flat, unravel = pt.ravel_vector(b)
     x_flat = jnp.zeros_like(b_flat) if x0 is None else pt.ravel(x0)
-    A_flat = _flat_operator(A, unravel)
-    precond = _flat_operator(M, unravel) if M is not None else None
+    A_flat = engine.flat_operator(A, unravel)
+    precond = engine.flat_operator(M, unravel) if M is not None else None
 
     r0 = b_flat - A_flat(x_flat)
     z0 = precond(r0) if precond is not None else r0
     p0 = z0
     rz0 = pt.tree_dot(r0, z0)
     rnorm0 = pt.tree_norm(r0)
-    threshold, _ = _tolerances(b_flat, tol, atol)
+    threshold, _ = engine.tolerances(b_flat, tol, atol)
 
-    if record_residuals:
-        trace0 = jnp.full((maxiter + 1,), jnp.nan, dtype=rnorm0.dtype)
-        trace0 = trace0.at[0].set(rnorm0)
-    else:
-        trace0 = None
-
+    trace0 = engine.trace_init(rnorm0, maxiter, record_residuals)
     diverged_at = 1e8 * jnp.maximum(rnorm0, pt.tree_norm(b_flat))
 
-    def cond(state):
+    def active_fn(state):
         j, _, _, _, _, _, rnorm, _, fail, _ = state
         return (j < maxiter) & (rnorm > threshold) & (fail == 0)
 
-    def body(state):
+    def step(state, active, gate_matvec):
+        # CG never records a window (ell == 0): the harness only runs
+        # this in the while phase, so ``active``/``gate_matvec`` carry no
+        # information and the body stays the unmasked textbook iteration.
+        del active, gate_matvec
         j, x, r, z, p, rz, rnorm, trace, fail, stag = state
         ap = A_flat(p)
         d = pt.tree_dot(p, ap)
-        bad, code = _classify_breakdown(d, rnorm, diverged_at)
+        bad, code = engine.classify_breakdown(d, rnorm, diverged_at)
         fail = jnp.where(fail > 0, fail, code)
         # Sanitize a poisoned A·p before it reaches the update pass:
         # alpha is zeroed on breakdown, but 0·NaN would still poison x/r.
@@ -278,32 +198,20 @@ def cg(
             fail,
         ).astype(jnp.int32)
         if stag is not None:
-            best, stall = stag
-            improved = rnorm < _STAGNATION_RTOL * best
-            stall = jnp.where(improved, 0, stall + 1).astype(jnp.int32)
-            best = jnp.minimum(best, rnorm)
-            fail = jnp.where(
-                (fail == 0) & (stall >= stagnation_window),
-                SolveStatus.STAGNATED,
-                fail,
-            ).astype(jnp.int32)
-            stag = (best, stall)
+            stag, fail = engine.stagnation_update(
+                stag, rnorm, fail, jnp.bool_(True), stagnation_window
+            )
         if trace is not None:
             trace = trace.at[j + 1].set(rnorm)
-        return (j + 1, x, r, z, p, rz_new, rnorm, trace, fail, stag)
+        return (j + 1, x, r, z, p, rz_new, rnorm, trace, fail, stag), ()
 
-    # A non-finite initial residual (poisoned x0 / operator) never enters
-    # the loop — flag it so status reads BREAKDOWN_NONFINITE, not MAXITER.
-    fail0 = jnp.where(
-        jnp.isfinite(rnorm0), 0, SolveStatus.BREAKDOWN_NONFINITE
-    ).astype(jnp.int32)
-    stag0 = (rnorm0, jnp.int32(0)) if stagnation_window > 0 else None
+    fail0 = engine.initial_fail(rnorm0)
+    stag0 = engine.stagnation_init(rnorm0, stagnation_window)
     state = (
         jnp.int32(0), x_flat, r0, z0, p0, rz0, rnorm0, trace0, fail0, stag0,
     )
-    j, x, _, _, _, _, rnorm, trace, fail, _ = jax.lax.while_loop(
-        cond, body, state
-    )
+    state, _ = engine.run_recording_loop(step, active_fn, state, ell=0)
+    j, x, _, _, _, _, rnorm, trace, fail, _ = state
     converged = rnorm <= threshold
     info = SolveInfo(
         iterations=j,
@@ -312,7 +220,7 @@ def cg(
         matvecs=j + 1,
         residual_norms=trace,
         breakdown=fail > 0,
-        status=_exit_status(converged, fail),
+        status=engine.exit_status(converged, fail),
     )
     return CGResult(x=unravel(x), info=info)
 
@@ -431,27 +339,27 @@ def defcg(
     initial guess) and iteration — runs on the flat engine: the vector
     packs to a contiguous ``(n,)`` array and the deflation basis to a 2-D
     ``(k, n)`` array, so ``(AW)ᵀ r`` fuses into the residual-update pass
-    and ``W μ`` into the direction pass.  The
-    iteration is split in two phases: a fixed-length ``lax.scan`` over the
-    first ``ell`` steps whose stacked outputs *are* the ``(P, AP)`` record
-    (each row is written exactly once — no ring buffer is carried through
-    loop state, which XLA would copy wholesale on every masked row write),
-    then a buffer-free ``while_loop`` for the remaining iterations.  Steps
-    after convergence inside the scan window are frozen — the matvec is
-    skipped via ``lax.cond``, the cheap vector passes run as masked
-    no-ops, zero rows are recorded — so the two-phase split is
-    semantically identical to one guarded loop.
+    and ``W μ`` into the direction pass.  The iteration itself is driven
+    by :func:`repro.core.engine.run_recording_loop` — def-CG supplies
+    only its ``step``/``active_fn`` pair, the harness owns the
+    fixed-length masked recording scan (whose stacked outputs *are* the
+    ``(P, AP, α, β)`` record) and the buffer-free ``while_loop`` for the
+    remaining iterations.  Steps after convergence inside the scan
+    window are frozen — the matvec is skipped via the harness's gated
+    ``lax.cond``, the cheap vector passes run as masked no-ops, zero
+    rows are recorded — so the two-phase split is semantically identical
+    to one guarded loop.
 
     Returns ``CGResult`` whose ``recycle`` field feeds
     :func:`repro.core.recycle.harmonic_ritz`.
     """
     b_flat, unravel = pt.ravel_vector(b)
-    threshold, _ = _tolerances(b_flat, tol, atol)
+    threshold, _ = engine.tolerances(b_flat, tol, atol)
     matvecs = jnp.int32(0)
     guard_fired = jnp.bool_(False)
 
-    A_flat = _flat_operator(A, unravel)
-    precond = _flat_operator(M, unravel) if M is not None else None
+    A_flat = engine.flat_operator(A, unravel)
+    precond = engine.flat_operator(M, unravel) if M is not None else None
     x_flat = (
         jnp.zeros_like(b_flat) if x0 is None else pt.ravel(x0)
     )
@@ -576,45 +484,33 @@ def defcg(
     # The carried recurrence scalar: rᵀz (== ‖r‖² without a preconditioner).
     rs0 = pt.tree_dot(r_flat, z_flat)
 
-    if record_residuals:
-        trace0 = jnp.full((maxiter + 1,), jnp.nan, dtype=rnorm0.dtype)
-        trace0 = trace0.at[0].set(rnorm0)
-    else:
-        trace0 = None
-
+    trace0 = engine.trace_init(rnorm0, maxiter, record_residuals)
     diverged_at = 1e8 * jnp.maximum(rnorm0, pt.tree_norm(b_flat))
 
-    def active_fn(j, rnorm, fail):
+    def active_fn(state):
+        j, rnorm, fail = state[0], state[5], state[7]
         keep_going = (rnorm > threshold) | (j < min_iters)
         return (j < maxiter) & keep_going & (fail == 0)
 
     def step(state, active, gate_matvec):
         """One def-CG iteration; ``active=False`` freezes the state.
 
-        The scan phase runs a fixed step count, so steps after
-        convergence are frozen: the matvec is gated behind a ``cond``
-        (``gate_matvec`` — skipping the expensive operator outright),
-        while the cheap fused vector passes are masked via ``alpha = 0``
-        and a frozen ``p`` — wrapping the *whole* body in a ``cond``
-        measured slower on active steps (branch-boundary state copies)
-        than letting the no-op passes run.
+        The recording scan runs a fixed step count, so steps after
+        convergence are frozen: the matvec is gated behind the harness's
+        ``cond`` (skipping the expensive operator outright), while the
+        cheap fused vector passes are masked via ``alpha = 0`` and a
+        frozen ``p`` — wrapping the *whole* body in a ``cond`` measured
+        slower on active steps (branch-boundary state copies) than
+        letting the no-op passes run.
         """
         j, x, r, p, rs, rnorm, trace, fail, stag = state
+        p_in = p
         if gate_matvec:
-            if batch_axis is None:
-                run_mv = active
-            else:
-                # Cross-tenant gate: any(active) over the vmap axis is
-                # unbatched, so the cond survives batching and the matvec
-                # is skipped once EVERY tenant's lane is frozen.
-                run_mv = (
-                    jax.lax.psum(active.astype(jnp.int32), batch_axis) > 0
-                )
-            ap = jax.lax.cond(run_mv, A_flat, jnp.zeros_like, p)
+            ap = engine.gated_matvec(A_flat, p, active, batch_axis)
         else:
             ap = A_flat(p)
         d = pt.tree_dot(p, ap)
-        bad, code = _classify_breakdown(d, rnorm, diverged_at)
+        bad, code = engine.classify_breakdown(d, rnorm, diverged_at)
         fail = jnp.where((fail == 0) & active, code, fail)
         # Sanitize a poisoned A·p before the fused passes touch it: alpha
         # is zeroed on breakdown, but 0·NaN = NaN would still poison x, r,
@@ -663,17 +559,8 @@ def defcg(
         ).astype(jnp.int32)
         rnorm = jnp.where(active, rnorm_new, rnorm)
         if stag is not None:
-            best, stall = stag
-            improved = rnorm_new < _STAGNATION_RTOL * best
-            stall_new = jnp.where(improved, 0, stall + 1).astype(jnp.int32)
-            fail = jnp.where(
-                (fail == 0) & active & (stall_new >= stagnation_window),
-                SolveStatus.STAGNATED,
-                fail,
-            ).astype(jnp.int32)
-            stag = (
-                jnp.where(active, jnp.minimum(best, rnorm_new), best),
-                jnp.where(active, stall_new, stall),
+            stag, fail = engine.stagnation_update(
+                stag, rnorm_new, fail, active, stagnation_window
             )
         if trace is not None:
             # Frozen steps rewrite slot j+1 with its old value, keeping
@@ -682,51 +569,23 @@ def defcg(
             trace = trace.at[j + 1].set(jnp.where(active, rnorm, old))
         j = j + active.astype(j.dtype)
         return (j, x, r, p, rs_new, rnorm, trace, fail, stag), (
-            ap, alpha, beta,
+            p_in, ap, alpha, beta,
         )
 
-    # A non-finite initial residual (poisoned basis/operator reached the
-    # deflated setup) never enters the loop — flag it so the exit status
-    # reads BREAKDOWN_NONFINITE rather than a 0-iteration MAXITER.
-    fail0 = jnp.where(
-        jnp.isfinite(rnorm0), 0, SolveStatus.BREAKDOWN_NONFINITE
-    ).astype(jnp.int32)
-    stag0 = (rnorm0, jnp.int32(0)) if stagnation_window > 0 else None
+    fail0 = engine.initial_fail(rnorm0)
+    stag0 = engine.stagnation_init(rnorm0, stagnation_window)
     state = (
         jnp.int32(0), x_flat, r_flat, p_flat, rs0, rnorm0, trace0,
         fail0, stag0,
     )
 
-    p_rows = ap_rows = a_rows = b_rows = None
-    if ell > 0:
-        # Recording phase: exactly ell scan steps whose stacked outputs are
-        # the (P, AP, α, β) record — each row is written once by the scan,
-        # so no (ell, n) buffer rides through loop state (XLA copies
-        # loop-carried buffers on masked dynamic row writes; scan outputs
-        # it writes in place).  Post-convergence steps contribute zero
-        # rows, matching the untouched tail of the seed's ring buffer.
-        def scan_body(state, _):
-            active = active_fn(state[0], state[5], state[7])
-            p_row = jnp.where(active, state[3], 0.0)
-            state, (ap, alpha, beta) = step(state, active, gate_matvec=True)
-            ap_row = jnp.where(active, ap, 0.0)
-            a_row = jnp.where(active, alpha, 0.0)
-            b_row = jnp.where(active, beta, 0.0)
-            return state, (p_row, ap_row, a_row, b_row)
-
-        state, (p_rows, ap_rows, a_rows, b_rows) = jax.lax.scan(
-            scan_body, state, None, length=ell
-        )
-
-    def cond(state):
-        return active_fn(state[0], state[5], state[7])
-
-    def body(state):
-        return step(state, jnp.bool_(True), gate_matvec=False)[0]
-
-    j, x, _, _, _, rnorm, trace, fail, _ = jax.lax.while_loop(
-        cond, body, state
+    state, rows = engine.run_recording_loop(
+        step, active_fn, state, ell=ell
     )
+    p_rows = ap_rows = a_rows = b_rows = None
+    if rows is not None:
+        p_rows, ap_rows, a_rows, b_rows = rows
+    j, x, _, _, _, rnorm, trace, fail, _ = state
 
     converged = rnorm <= threshold
     info = SolveInfo(
@@ -736,7 +595,7 @@ def defcg(
         matvecs=matvecs + j,
         residual_norms=trace,
         breakdown=fail > 0,
-        status=_exit_status(converged, fail),
+        status=engine.exit_status(converged, fail),
         guard_fired=guard_fired,
     )
     recycle = None

@@ -307,6 +307,95 @@ def fused_rz_reduce_chunked(r, z, aw=None):
 
 
 # ---------------------------------------------------------------------------
+# lsmr_update: hbar ← h − c0·hbar, x ← x + c1·hbar, h ← v − c2·h — one pass
+# ---------------------------------------------------------------------------
+#
+# One LSMR iteration's non-matvec vector work is three coupled AXPY-style
+# recurrences over (x, hbar, h, v).  Issued separately they are three HBM
+# sweeps (six reads, three writes); fused, every operand is read once and
+# the shared intermediate hbar_new never round-trips through HBM.  The
+# rotation scalars are pre-reduced by the solver (they come from the 2×2
+# Givens recurrences, O(1) work) and ride in SMEM.
+
+
+def _lsmr_update_kernel(c_ref, x_ref, hbar_ref, h_ref, v_ref,
+                        xo_ref, hbo_ref, ho_ref):
+    c0, c1, c2 = c_ref[0, 0], c_ref[1, 0], c_ref[2, 0]
+    hv = h_ref[...].astype(jnp.float32)
+    hb = hv - c0 * hbar_ref[...].astype(jnp.float32)
+    xo_ref[...] = (
+        x_ref[...].astype(jnp.float32) + c1 * hb
+    ).astype(xo_ref.dtype)
+    hbo_ref[...] = hb.astype(hbo_ref.dtype)
+    ho_ref[...] = (
+        v_ref[...].astype(jnp.float32) - c2 * hv
+    ).astype(ho_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def lsmr_update_pallas(
+    x: jnp.ndarray,
+    hbar: jnp.ndarray,
+    h: jnp.ndarray,
+    v: jnp.ndarray,
+    c0,
+    c1,
+    c2,
+    *,
+    block: int = 4096,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-pass LSMR vector update (f32 accumulation on the VPU).
+
+    Returns ``(x + c1·(h − c0·hbar), h − c0·hbar, v − c2·h)`` — the
+    ``(x, hbar, h)`` state after one iteration, with the scalars packed
+    into SMEM and every n-sized operand read exactly once.
+    """
+    n = x.shape[0]
+    rows = max(8, block // _LANES)
+    n_pad = _round_up(n, _LANES * rows)
+    nrows = n_pad // _LANES
+    grid = (nrows // rows,)
+
+    x2, hb2, h2, v2 = (_pad_rows(u, n_pad) for u in (x, hbar, h, v))
+    c2_ = jnp.stack([
+        jnp.asarray(c0, jnp.float32),
+        jnp.asarray(c1, jnp.float32),
+        jnp.asarray(c2, jnp.float32),
+    ]).reshape(3, 1)
+
+    vec_spec = pl.BlockSpec((rows, _LANES), lambda i: (i, 0))
+    smem = functools.partial(pl.BlockSpec, memory_space=pltpu.SMEM)
+    outs = pl.pallas_call(
+        _lsmr_update_kernel,
+        grid=grid,
+        in_specs=[smem((3, 1), lambda i: (0, 0))] + [vec_spec] * 4,
+        out_specs=[vec_spec] * 3,
+        out_shape=[
+            jax.ShapeDtypeStruct((nrows, _LANES), x.dtype),
+            jax.ShapeDtypeStruct((nrows, _LANES), hbar.dtype),
+            jax.ShapeDtypeStruct((nrows, _LANES), h.dtype),
+        ],
+        compiler_params=CompilerParams(dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+        name="lsmr_update",
+    )(c2_, x2, hb2, h2, v2)
+    return (
+        outs[0].reshape(n_pad)[:n],
+        outs[1].reshape(n_pad)[:n],
+        outs[2].reshape(n_pad)[:n],
+    )
+
+
+def lsmr_update_chunked(x, hbar, h, v, c0, c1, c2):
+    """Pure-jnp twin: same math, one fused XLA loop over the four vectors."""
+    hbar_new = h - c0 * hbar
+    x_new = x + c1 * hbar_new
+    h_new = v - c2 * h
+    return x_new, hbar_new, h_new
+
+
+# ---------------------------------------------------------------------------
 # fused_deflate_direction: p ← βp + r − Wμ, plus the (p, Ap) buffer write
 # ---------------------------------------------------------------------------
 

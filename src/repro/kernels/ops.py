@@ -33,6 +33,8 @@ from repro.kernels.cg_fused import (
     fused_deflate_direction_pallas,
     fused_rz_reduce_chunked,
     fused_rz_reduce_pallas,
+    lsmr_update_chunked,
+    lsmr_update_pallas,
     recombine_blocks_chunked,
     recombine_blocks_pallas,
     self_gram_chunked,
@@ -212,6 +214,39 @@ def fused_deflate_direction(
         return fused_deflate_direction_chunked(
             r, p, beta, w, mu, ap, idx, p_buf, ap_buf
         )
+    raise ValueError(f"unknown impl={impl!r}")
+
+
+def lsmr_update(
+    x: jnp.ndarray,
+    hbar: jnp.ndarray,
+    h: jnp.ndarray,
+    v: jnp.ndarray,
+    c0,
+    c1,
+    c2,
+    *,
+    impl: str = "auto",
+    block: int = 4096,
+):
+    """``(x + c1·(h − c0·hbar), h − c0·hbar, v − c2·h)`` in one pass.
+
+    The LSMR iteration's three coupled vector recurrences (see
+    ``ref.lsmr_update`` for the semantic definition) fused into a single
+    sweep over ``x, hbar, h, v`` — the least-squares analogue of
+    :func:`fused_cg_update`.  The rotation scalars ``c0, c1, c2`` are the
+    pre-reduced Givens quantities (O(1) host-free scalars).
+    """
+    impl = _resolve(impl)
+    if impl in ("pallas", "interpret"):
+        return lsmr_update_pallas(
+            x, hbar, h, v, c0, c1, c2,
+            block=block, interpret=(impl == "interpret"),
+        )
+    if impl == "reference":
+        return ref.lsmr_update(x, hbar, h, v, c0, c1, c2)
+    if impl == "chunked":
+        return lsmr_update_chunked(x, hbar, h, v, c0, c1, c2)
     raise ValueError(f"unknown impl={impl!r}")
 
 

@@ -84,6 +84,24 @@ def fused_deflate_direction(
     return p_new, p_buf, ap_buf
 
 
+def lsmr_update(x, hbar, h, v, c0, c1, c2):
+    """Semantic definition of the fused LSMR iteration update.
+
+    One LSMR iteration's three vector recurrences (Fong & Saunders 2011,
+    with the rotation scalars pre-reduced by the caller):
+
+        hbar_new = h − c0·hbar        (c0 = θ̄ρ / (ρ_old ρ̄_old))
+        x_new    = x + c1·hbar_new    (c1 = ζ / (ρρ̄))
+        h_new    = v − c2·h           (c2 = θ_new / ρ)
+
+    Returns ``(x_new, hbar_new, h_new)``.
+    """
+    hbar_new = h - c0 * hbar
+    x_new = x + c1 * hbar_new
+    h_new = v - c2 * h
+    return x_new, hbar_new, h_new
+
+
 def recombine_blocks(s: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
     """Semantic definition of the stacked two-block recombination GEMM.
 

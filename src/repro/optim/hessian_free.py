@@ -11,6 +11,20 @@ solve*, exactly the paper's sequence-of-related-SPD-systems setting: as the
 optimizer converges, consecutive GGN operators drift less and recycling
 buys more (paper §3, "the iterates change less and less").
 
+``HFConfig(solver="gauss_newton")`` is the TRUE Gauss-Newton variant for
+residual models: instead of squaring the Jacobian into the SPD normal
+operator, each step solves the damped least-squares problem
+
+    min_δ ‖J δ + r‖² + λ ‖δ‖²
+
+with **(def)LSMR** on the rectangular :class:`~repro.core.GaussNewtonOperator`
+(one ``jvp``/``vjp`` per iteration, conditioning κ(J) instead of κ(J)²).
+The LM-adapted damping λ is a traced value while ``SolveSpec.lsq_shift``
+is static, so the step folds λ into the operator — LSMR runs on
+``J/√λ`` with unit shift, which has the identical minimizer — and the
+same ``RecycleState`` recycles the normal-equations-geometry basis
+across outer steps.
+
 Everything (def-CG loop included) is shape-static and jit-compatible, so
 ``hf_step`` pjit-shards across a pod like any train step.  The inner
 solve+extract is one step of the device-resident sequence engine behind
@@ -26,14 +40,16 @@ optimizer state — and therefore of checkpoints.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Tuple
+from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import (
+    GaussNewtonOperator,
     GGNOperator,
     HarmonicRitz,
+    LinearOperator,
     RecycleState,
     RecycleStrategy,
     SolveSpec,
@@ -55,7 +71,11 @@ class HFConfig:
     init_damping: float = 1.0
     min_damping: float = 1e-6
     max_damping: float = 1e6
-    recycle: bool = True  # False → plain CG baseline (paper comparison)
+    recycle: bool = True  # False → plain CG/LSMR baseline (paper comparison)
+    # "ggn": damped normal-equations system via GGNOperator + (def-)CG.
+    # "gauss_newton": TRUE GN step via GaussNewtonOperator + (def)LSMR on
+    # min ‖Jδ + r‖² + λ‖δ‖² — needs hf_step(residual_fn=...).
+    solver: str = "ggn"
     # Recycle strategy for the Newton sequence of GGN systems.  The GGN
     # matvec is ~3 forward passes, so WindowedRecombine's zero-matvec
     # refresh (k model linearizations saved per step, drift-guarded) is
@@ -63,8 +83,26 @@ class HFConfig:
     # conservative default.
     strategy: RecycleStrategy = HarmonicRitz()
 
+    def __post_init__(self):
+        if self.solver not in ("ggn", "gauss_newton"):
+            raise ValueError(
+                f"HFConfig.solver must be 'ggn' or 'gauss_newton', "
+                f"got {self.solver!r}"
+            )
+
     def solve_spec(self) -> SolveSpec:
         """The inner solver's configuration as the shared SolveSpec."""
+        if self.solver == "gauss_newton":
+            # lsq_shift=1.0: the traced LM damping is folded into the
+            # operator (J/√λ), so the spec-level shift stays static.
+            return SolveSpec(
+                method="deflsmr" if self.recycle else "lsmr",
+                k=self.k,
+                ell=self.ell if self.recycle else 0,
+                tol=self.cg_tol,
+                maxiter=self.cg_maxiter,
+                lsq_shift=1.0,
+            )
         return SolveSpec(
             method="defcg",
             k=self.k,
@@ -123,54 +161,104 @@ def hf_step(
     state: HFState,
     batch: Any,
     *,
-    model_fn: Callable[[Pytree, Any], jnp.ndarray],
-    loss_fn: Callable[[jnp.ndarray, Any], jnp.ndarray],
+    model_fn: Optional[Callable[[Pytree, Any], jnp.ndarray]] = None,
+    loss_fn: Optional[Callable[[jnp.ndarray, Any], jnp.ndarray]] = None,
     loss_hvp: Callable = softmax_xent_hvp,
+    residual_fn: Optional[Callable[[Pytree, Any], Pytree]] = None,
     cfg: HFConfig = HFConfig(),
 ) -> Tuple[Pytree, HFState, dict]:
     """One Hessian-free step.  ``model_fn(params, batch) -> outputs``,
-    ``loss_fn(outputs, batch) -> scalar``.  Fully traceable."""
+    ``loss_fn(outputs, batch) -> scalar``.  Fully traceable.
 
-    def total_loss(p):
-        return loss_fn(model_fn(p, batch), batch)
-
-    loss, grads = jax.value_and_grad(total_loss)(params)
-
-    op = GGNOperator(
-        model_fn=lambda p: model_fn(p, batch),
-        loss_hvp=lambda out, t: loss_hvp(out, t),
-        params=params,
-        damping=state.damping,
-    )
-    neg_grad = pt.tree_scale(-1.0, grads)
-
-    if cfg.recycle:
-        # One front-door step: exact AW refresh (GGN linearized once),
-        # flat def-CG, masked harmonic-Ritz extraction into the next state.
-        # Plain solve (not solve_jit): the GGNOperator's closures are
-        # rebuilt per step, so an inner jit would cache-miss every call —
-        # hf_step is designed to be jit-wrapped as a whole by the caller
-        # (as examples/hessian_free_lm.py does), like any train step.
-        res = solve(op, neg_grad, cfg.solve_spec(), state.recycle,
-                    x0=state.delta_prev)
-        delta, result, recycle_next = res.x, res, res.state
-    else:
-        from repro.core import defcg
-
-        result = defcg(
-            op, neg_grad, state.delta_prev,
-            ell=0, tol=cfg.cg_tol, maxiter=cfg.cg_maxiter,
+    With ``cfg.solver == "gauss_newton"`` pass ``residual_fn(params,
+    batch) -> residual pytree`` instead; the step minimizes the damped
+    least-squares model of ``loss = ½‖r‖²`` with (def)LSMR on the
+    Jacobian itself.
+    """
+    if cfg.solver == "gauss_newton":
+        if residual_fn is None:
+            raise ValueError(
+                "HFConfig(solver='gauss_newton') needs "
+                "hf_step(residual_fn=...)"
+            )
+        gn = GaussNewtonOperator(
+            residual_fn=lambda p: residual_fn(p, batch), params=params
         )
-        delta, recycle_next = result.x, state.recycle
+
+        def total_loss(p):
+            rr = residual_fn(p, batch)
+            return 0.5 * pt.tree_dot(rr, rr)
+
+        r = gn.residuals()
+        loss = 0.5 * pt.tree_dot(r, r)
+        grads = gn.rmatvec(r)
+        # Fold the traced λ into the operator: LSMR on (J/√λ, −r/√λ)
+        # with unit shift minimizes λ⁻¹(‖Jδ + r‖² + λ‖δ‖²) — the same
+        # δ — while SolveSpec.lsq_shift stays a static 1.0.
+        s = jax.lax.rsqrt(state.damping.astype(pt.ravel(r).dtype))
+        op = LinearOperator(
+            matvec=lambda v: pt.tree_scale(s, gn.matvec(v)),
+            rmatvec=lambda u: pt.tree_scale(s, gn.rmatvec(u)),
+        )
+        res = solve(
+            op,
+            pt.tree_scale(-s, r),
+            cfg.solve_spec(),
+            state.recycle if cfg.recycle else None,
+            x0=state.delta_prev,
+        )
+        delta, result = res.x, res
+        recycle_next = res.state if cfg.recycle else state.recycle
+        jdelta = gn.matvec(delta)
+        curvature = pt.tree_dot(jdelta, jdelta) + state.damping * pt.tree_dot(
+            delta, delta
+        )
+    else:
+        if model_fn is None or loss_fn is None:
+            raise ValueError(
+                "HFConfig(solver='ggn') needs hf_step(model_fn=..., "
+                "loss_fn=...)"
+            )
+
+        def total_loss(p):
+            return loss_fn(model_fn(p, batch), batch)
+
+        loss, grads = jax.value_and_grad(total_loss)(params)
+
+        op = GGNOperator(
+            model_fn=lambda p: model_fn(p, batch),
+            loss_hvp=lambda out, t: loss_hvp(out, t),
+            params=params,
+            damping=state.damping,
+        )
+        neg_grad = pt.tree_scale(-1.0, grads)
+
+        if cfg.recycle:
+            # One front-door step: exact AW refresh (GGN linearized
+            # once), flat def-CG, masked harmonic-Ritz extraction into
+            # the next state.  Plain solve (not solve_jit): the
+            # GGNOperator's closures are rebuilt per step, so an inner
+            # jit would cache-miss every call — hf_step is designed to
+            # be jit-wrapped as a whole by the caller (as
+            # examples/hessian_free_lm.py does), like any train step.
+            res = solve(op, neg_grad, cfg.solve_spec(), state.recycle,
+                        x0=state.delta_prev)
+            delta, result, recycle_next = res.x, res, res.state
+        else:
+            from repro.core import defcg
+
+            result = defcg(
+                op, neg_grad, state.delta_prev,
+                ell=0, tol=cfg.cg_tol, maxiter=cfg.cg_maxiter,
+            )
+            delta, recycle_next = result.x, state.recycle
+        curvature = pt.tree_dot(delta, op.matvec(delta))
 
     new_params = pt.tree_axpy(cfg.lr, delta, params)
 
     # Levenberg–Marquardt damping from the reduction ratio ρ.
     new_loss = total_loss(new_params)
-    quad_decrease = -(
-        pt.tree_dot(grads, delta)
-        + 0.5 * pt.tree_dot(delta, op.matvec(delta))
-    )
+    quad_decrease = -(pt.tree_dot(grads, delta) + 0.5 * curvature)
     rho = (loss - new_loss) / jnp.maximum(quad_decrease, 1e-30)
     damping = jnp.where(rho > 0.75, state.damping * (2.0 / 3.0), state.damping)
     damping = jnp.where(rho < 0.25, damping * 1.5, damping)

@@ -281,19 +281,22 @@ class TestSolveFrontDoor:
             np.asarray(r1.x), np.asarray(r2.x), rtol=1e-7, atol=1e-9
         )
 
-    def test_legacy_keyword_w0_forwarding(self):
-        """Legacy solve_sequence(..., W0=w, AW0=aw, k=…) — keywords, not
-        positional — must forward through the deprecation shim."""
+    def test_legacy_w0_signature_removed(self):
+        """The PR-3-era solve_sequence(systems, b, W0, AW0, k=…) shim is
+        gone: positional arrays in the spec slot raise, keywords raise,
+        and the supported replacement — state0=RecycleState — works."""
         mats, bs = _drifting_mats(num=3)
         first = solve_sequence(mats[:1], bs[:1], self.SPEC,
                                make_operator=from_matrix)
-        with pytest.warns(DeprecationWarning):
-            seq = solve_sequence(
-                mats[1:], bs[1:],
-                W0=first.state.W, AW0=first.state.AW,
-                k=8, ell=12, make_operator=from_matrix,
-                tol=1e-8, maxiter=5000,
-            )
+        with pytest.raises(TypeError, match="removed"):
+            solve_sequence(mats[1:], bs[1:], first.state.W, first.state.AW,
+                           make_operator=from_matrix)
+        with pytest.raises(TypeError):
+            solve_sequence(mats[1:], bs[1:], self.SPEC,
+                           W0=first.state.W, AW0=first.state.AW,
+                           make_operator=from_matrix)
+        seq = solve_sequence(mats[1:], bs[1:], self.SPEC, first.state,
+                             make_operator=from_matrix)
         assert np.asarray(seq.info.converged).all()
 
     def test_recycle_state_checkpoint_roundtrip(self, tmp_path):

@@ -35,14 +35,21 @@ EXPECTED_CORE_ALL = sorted(
         "FaultInjectingOperator",
         "truncate_latest_checkpoint",
         # operators
+        "GaussNewtonOperator",
         "GGNOperator",
         "KernelSystemOperator",
         "DenseMatrixOperator",
         "LinearOperator",
+        "adjoint_matvec",
         "apply_to_basis",
         "from_callable",
         "from_matrix",
         "materialize",
+        # least-squares engine (ISSUE 9: the method axis)
+        "lsmr",
+        "lsmr_jit",
+        "solve_sequence_lsmr",
+        "solve_sequence_lsmr_jit",
         # preconditioners
         "JacobiPreconditioner",
         "NystromPreconditioner",
@@ -98,6 +105,8 @@ EXPECTED_SOLVESPEC_FIELDS = {
     "recovery_rungs": 3,
     "recovery_shift": 1e-6,
     "stagnation_window": 0,
+    # ISSUE 9: regularization shift λ for the least-squares methods
+    "lsq_shift": 0.0,
 }
 
 # Failure-handling diagnostics returned by every front door.

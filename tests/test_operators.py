@@ -1,0 +1,248 @@
+"""Adjoint contract of every LinearOperator flavour.
+
+The LSMR engine (``core/lsmr.py``) touches operators only through the
+``matvec``/``rmatvec`` pair resolved by ``operators.adjoint_matvec``;
+its correctness rests entirely on the adjoint identity
+
+    ⟨A v, w⟩ = ⟨v, Aᵀ w⟩   for all v ∈ domain, w ∈ range.
+
+These tests check that identity to 1e-10 on random rectangular shapes
+for every operator class in the repo — including the implicitly
+symmetric ones, whose adjoint is their own matvec by contract.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pytree as pt
+from repro.core.faults import FaultInjectingOperator
+from repro.core.operators import (
+    DenseMatrixOperator,
+    GaussNewtonOperator,
+    GGNOperator,
+    KernelSystemOperator,
+    LinearOperator,
+    adjoint_matvec,
+    from_callable,
+    from_matrix,
+)
+
+ADJ_TOL = 1e-10
+
+# A spread of genuinely rectangular shapes (tall, wide, square) so a
+# transposition bug cannot hide behind m == n.
+RECT_SHAPES = [(7, 4), (4, 7), (23, 11), (11, 23), (16, 16)]
+
+
+def _adjoint_gap(op, v, w):
+    """|⟨Av, w⟩ − ⟨v, Aᵀw⟩| scaled to the magnitudes involved."""
+    av = op.matvec(v)
+    atw = adjoint_matvec(op)(w)
+    lhs = pt.tree_dot(av, w)
+    rhs = pt.tree_dot(v, atw)
+    scale = max(1.0, abs(float(lhs)), abs(float(rhs)))
+    return abs(float(lhs - rhs)) / scale
+
+
+class TestRectangularAdjoints:
+    @pytest.mark.parametrize("m,n", RECT_SHAPES)
+    def test_dense_matrix_operator(self, m, n):
+        rng = np.random.default_rng(m * 100 + n)
+        op = DenseMatrixOperator(jnp.asarray(rng.standard_normal((m, n))))
+        v = jnp.asarray(rng.standard_normal(n))
+        w = jnp.asarray(rng.standard_normal(m))
+        assert _adjoint_gap(op, v, w) < ADJ_TOL
+
+    @pytest.mark.parametrize("m,n", RECT_SHAPES)
+    def test_dense_matrix_operator_T_roundtrip(self, m, n):
+        rng = np.random.default_rng(m * 100 + n + 1)
+        A = jnp.asarray(rng.standard_normal((m, n)))
+        op = DenseMatrixOperator(A)
+        v = jnp.asarray(rng.standard_normal(n))
+        w = jnp.asarray(rng.standard_normal(m))
+        # .T is itself a DenseMatrixOperator whose adjoint is the original
+        np.testing.assert_allclose(
+            np.asarray(op.T.matvec(w)), np.asarray(A.T @ w), atol=1e-12
+        )
+        assert _adjoint_gap(op.T, w, v) < ADJ_TOL
+        np.testing.assert_array_equal(
+            np.asarray(op.T.T.mat), np.asarray(A)
+        )
+
+    @pytest.mark.parametrize("m,n", RECT_SHAPES)
+    def test_linear_operator_with_rmatvec(self, m, n):
+        rng = np.random.default_rng(m * 100 + n + 2)
+        A = jnp.asarray(rng.standard_normal((m, n)))
+        op = LinearOperator(
+            matvec=lambda v: A @ v, rmatvec=lambda u: A.T @ u
+        )
+        v = jnp.asarray(rng.standard_normal(n))
+        w = jnp.asarray(rng.standard_normal(m))
+        assert _adjoint_gap(op, v, w) < ADJ_TOL
+        # T swaps the closures and T.T round-trips
+        assert _adjoint_gap(op.T, w, v) < ADJ_TOL
+        np.testing.assert_allclose(
+            np.asarray(op.T.T.matvec(v)), np.asarray(A @ v), atol=1e-12
+        )
+
+    @pytest.mark.parametrize("m,n", RECT_SHAPES)
+    def test_gauss_newton_operator(self, m, n):
+        """J of a nonlinear residual map: jvp vs vjp must be adjoint."""
+        rng = np.random.default_rng(m * 100 + n + 3)
+        X = jnp.asarray(rng.standard_normal((m, n)))
+        y = jnp.asarray(rng.standard_normal(m))
+        op = GaussNewtonOperator(
+            residual_fn=lambda p: jnp.tanh(X @ p) - y,
+            params=jnp.asarray(rng.standard_normal(n)),
+        )
+        v = jnp.asarray(rng.standard_normal(n))
+        w = jnp.asarray(rng.standard_normal(m))
+        assert _adjoint_gap(op, v, w) < ADJ_TOL
+        # .T exposes the swapped pair as a LinearOperator
+        assert _adjoint_gap(op.T, w, v) < ADJ_TOL
+
+    def test_gauss_newton_operator_pytree_domain(self):
+        """Params and residuals may both be pytrees — the adjoint holds
+        in the raveled inner product."""
+        rng = np.random.default_rng(7)
+        X = jnp.asarray(rng.standard_normal((9, 5)))
+
+        def residual_fn(p):
+            h = jnp.tanh(X @ p["w"] + p["b"])
+            return {"r1": h[:4], "r2": 2.0 * h[4:]}
+
+        params = {
+            "w": jnp.asarray(rng.standard_normal(5)),
+            "b": jnp.asarray(rng.standard_normal(())),
+        }
+        op = GaussNewtonOperator(residual_fn=residual_fn, params=params)
+        v = {
+            "w": jnp.asarray(rng.standard_normal(5)),
+            "b": jnp.asarray(rng.standard_normal(())),
+        }
+        w = {
+            "r1": jnp.asarray(rng.standard_normal(4)),
+            "r2": jnp.asarray(rng.standard_normal(5)),
+        }
+        assert _adjoint_gap(op, v, w) < ADJ_TOL
+
+    @pytest.mark.parametrize("m,n", RECT_SHAPES)
+    def test_scaled_and_sum_preserve_adjoint(self, m, n):
+        rng = np.random.default_rng(m * 100 + n + 4)
+        A = jnp.asarray(rng.standard_normal((m, n)))
+        B = jnp.asarray(rng.standard_normal((m, n)))
+        opA = LinearOperator(lambda v: A @ v, rmatvec=lambda u: A.T @ u)
+        opB = LinearOperator(lambda v: B @ v, rmatvec=lambda u: B.T @ u)
+        v = jnp.asarray(rng.standard_normal(n))
+        w = jnp.asarray(rng.standard_normal(m))
+        assert _adjoint_gap(opA.scaled(-1.7), v, w) < ADJ_TOL
+        assert _adjoint_gap(opA + opB, v, w) < ADJ_TOL
+
+    def test_shifted_preserves_adjoint_square(self):
+        rng = np.random.default_rng(11)
+        A = jnp.asarray(rng.standard_normal((13, 13)))
+        op = LinearOperator(lambda v: A @ v, rmatvec=lambda u: A.T @ u)
+        v = jnp.asarray(rng.standard_normal(13))
+        w = jnp.asarray(rng.standard_normal(13))
+        assert _adjoint_gap(op.shifted(0.37), v, w) < ADJ_TOL
+
+
+class TestSymmetricByContract:
+    """Operators without an ``rmatvec`` declare themselves symmetric:
+    ``adjoint_matvec`` resolves to their own matvec, and the adjoint
+    identity must hold with that resolution (i.e. they really ARE
+    symmetric — a non-symmetric operator sneaking through the implicit
+    contract is exactly the bug this guards against)."""
+
+    def test_from_callable_symmetric(self):
+        rng = np.random.default_rng(21)
+        A = rng.standard_normal((12, 12))
+        S = jnp.asarray(A + A.T)
+        op = from_callable(lambda v: S @ v)
+        v = jnp.asarray(rng.standard_normal(12))
+        w = jnp.asarray(rng.standard_normal(12))
+        assert adjoint_matvec(op) is op.matvec
+        assert _adjoint_gap(op, v, w) < ADJ_TOL
+
+    def test_from_matrix_spd(self):
+        rng = np.random.default_rng(22)
+        A = rng.standard_normal((10, 10))
+        op = from_matrix(jnp.asarray(A @ A.T + 10 * np.eye(10)))
+        v = jnp.asarray(rng.standard_normal(10))
+        w = jnp.asarray(rng.standard_normal(10))
+        assert _adjoint_gap(op, v, w) < ADJ_TOL
+
+    def test_kernel_system_operator(self):
+        rng = np.random.default_rng(23)
+        G = rng.standard_normal((14, 14))
+        K = jnp.asarray(G @ G.T)
+        op = KernelSystemOperator(
+            kernel_matvec=lambda u: K @ u,
+            sqrt_h=jnp.asarray(rng.uniform(0.1, 1.0, 14)),
+        )
+        v = jnp.asarray(rng.standard_normal(14))
+        w = jnp.asarray(rng.standard_normal(14))
+        assert _adjoint_gap(op, v, w) < ADJ_TOL
+
+    def test_ggn_operator(self):
+        rng = np.random.default_rng(24)
+        X = jnp.asarray(rng.standard_normal((20, 6)))
+        op = GGNOperator(
+            model_fn=lambda p: jnp.tanh(X @ p),
+            loss_hvp=lambda out, t: 2.0 * t / out.size,
+            params=jnp.asarray(rng.standard_normal(6)),
+            damping=jnp.asarray(0.3),
+        )
+        v = jnp.asarray(rng.standard_normal(6))
+        w = jnp.asarray(rng.standard_normal(6))
+        assert _adjoint_gap(op, v, w) < ADJ_TOL
+
+    def test_fault_injecting_wrapper_with_zero_poison(self):
+        """poison=0.0 is a bit-exact no-op, so the wrapper inherits the
+        base operator's (symmetric) adjoint."""
+        rng = np.random.default_rng(25)
+        A = rng.standard_normal((9, 9))
+        base = from_matrix(jnp.asarray(A @ A.T + 9 * np.eye(9)))
+        op = FaultInjectingOperator(base=base, poison=jnp.asarray(0.0))
+        v = jnp.asarray(rng.standard_normal(9))
+        w = jnp.asarray(rng.standard_normal(9))
+        av = op(v)
+        atw = adjoint_matvec(base)(w)
+        gap = abs(float(pt.tree_dot(av, w) - pt.tree_dot(v, atw)))
+        assert gap < ADJ_TOL
+
+
+class TestAdjointResolution:
+    def test_adjoint_matvec_prefers_rmatvec(self):
+        rng = np.random.default_rng(31)
+        A = jnp.asarray(rng.standard_normal((5, 3)))
+        op = DenseMatrixOperator(A)
+        u = jnp.asarray(rng.standard_normal(5))
+        np.testing.assert_allclose(
+            np.asarray(adjoint_matvec(op)(u)), np.asarray(A.T @ u),
+            atol=1e-12,
+        )
+
+    def test_adjoint_matvec_bare_callable(self):
+        f = lambda v: 2.0 * v  # noqa: E731
+        assert adjoint_matvec(f) is f
+
+    def test_adjoint_under_jit_and_vmap(self):
+        """The pair survives jit+vmap — the shape LSMR actually runs in
+        (batched tenants under one compiled program)."""
+        rng = np.random.default_rng(32)
+        mats = jnp.asarray(rng.standard_normal((4, 8, 5)))
+        vs = jnp.asarray(rng.standard_normal((4, 5)))
+        ws = jnp.asarray(rng.standard_normal((4, 8)))
+
+        @jax.jit
+        @jax.vmap
+        def gaps(mat, v, w):
+            op = DenseMatrixOperator(mat)
+            return pt.tree_dot(op.matvec(v), w) - pt.tree_dot(
+                v, adjoint_matvec(op)(w)
+            )
+
+        assert float(jnp.max(jnp.abs(gaps(mats, vs, ws)))) < ADJ_TOL

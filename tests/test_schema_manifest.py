@@ -39,7 +39,7 @@ class TestManifestMatchesLiveCode:
             "method", "k", "ell", "tol", "atol", "maxiter", "select",
             "waw_jitter", "refresh_aw", "precond", "precond_rank",
             "precond_sigma", "strategy", "recovery_rungs",
-            "recovery_shift", "stagnation_window",
+            "recovery_shift", "stagnation_window", "lsq_shift",
         ]
 
     def test_manifest_version_matches_checkpoint_manager(self):

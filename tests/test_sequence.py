@@ -27,7 +27,6 @@ from repro.core import (
     from_matrix,
     harmonic_ritz,
     harmonic_ritz_flat,
-    solve_sequence,
     solve_sequence_jit,
 )
 from repro.core import pytree as pt
@@ -160,9 +159,11 @@ class TestSolveSequence:
         """W0 without AW0 in stale mode would deflate against AW = 0 and
         report a silently wrong 'converged' solution — must be rejected."""
         mats, bs = _drifting_sequence(num=2)
+        from repro.core import recycle as recycle_mod
+
         W0 = jnp.asarray(np.random.default_rng(0).standard_normal((4, 96)))
         with pytest.raises(ValueError, match="stale"):
-            solve_sequence(
+            recycle_mod.solve_sequence(
                 mats, bs, W0, None, k=4, ell=8, make_operator=from_matrix,
                 refresh_aw="stale",
             )
@@ -199,10 +200,12 @@ class TestSolveSequence:
         here.  This is the acceptance criterion made executable — extended
         to the batched multi-tenant front door, which must likewise lower
         to ONE XLA computation (single jaxpr, no host round-trips)."""
+        from repro.core import recycle as recycle_mod
+
         mats, bs = _drifting_sequence(num=3)
 
         def run(mats, bs):
-            seq = solve_sequence(
+            seq = recycle_mod.solve_sequence(
                 mats, bs, k=4, ell=8, make_operator=from_matrix,
                 tol=1e-6, maxiter=200,
             )

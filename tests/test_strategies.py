@@ -458,8 +458,10 @@ class TestSequenceDivergenceGuard:
         return KernelSystemOperator(k_mv, shs), bs, W0, AW0, k_mv, shs
 
     def test_stale_poisoned_seed_recovers_with_fallback(self):
+        from repro.core import recycle as recycle_mod
+
         ops, bs, W0, AW0, k_mv, shs = self._poisoned_seed()
-        seq = solve_sequence(
+        seq = recycle_mod.solve_sequence(
             ops, bs, W0, AW0, k=4, ell=12, tol=1e-5, maxiter=300,
             refresh_aw="stale", divergence_fallback=True,
         )
@@ -475,8 +477,10 @@ class TestSequenceDivergenceGuard:
         """The guard exists for a reason: same seed, fallback off, the
         first system must NOT converge (this is the pre-refactor device
         path's silent failure mode)."""
+        from repro.core import recycle as recycle_mod
+
         ops, bs, W0, AW0, _, _ = self._poisoned_seed()
-        seq = solve_sequence(
+        seq = recycle_mod.solve_sequence(
             ops, bs, W0, AW0, k=4, ell=12, tol=1e-5, maxiter=300,
             refresh_aw="stale", divergence_fallback=False,
         )

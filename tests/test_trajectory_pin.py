@@ -1,0 +1,171 @@
+"""Bit-identity pins for the engine-harness refactor (ISSUE 9).
+
+The harness extraction (``core/engine.py``) must be a *relocation* of the
+loop machinery, not a rewrite: ``cg`` and ``defcg`` re-seated on the
+engine have to reproduce the pre-refactor iterate trajectories BIT FOR
+BIT.  This module pins them against golden data captured from the
+pre-refactor solvers on a fig2-style GP Newton trace:
+
+  * plain CG on the first Newton system — final iterate, iteration count,
+    matvec count, status;
+  * the def-CG sequence front door over the drifting trace — per-system
+    solutions, residual norms, iteration/matvec counts, statuses, Ritz
+    values, recovery rungs, and the final recycled basis;
+  * a recovery-ladder case (indefinite operator, ladder armed) — the
+    rung taken, terminal status, and honest matvec total.
+
+Regenerate the golden file ONLY when a deliberate numeric change is
+intended (document it in the PR):
+
+    PYTHONPATH=src python tests/test_trajectory_pin.py
+
+Comparisons are exact (``assert_array_equal`` on raw float bits) — any
+reordering of the loop-body arithmetic shows up here.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "trajectories_fig2.npz")
+
+_N = 96  # GP trace size — small enough for CI, big enough to iterate
+_K, _ELL = 4, 8
+_NUM_SYSTEMS = 4
+
+
+def _fig2_newton_trace():
+    """A miniature fig2 GP-classification Newton trace.
+
+    ``A_t = I + H_t^{1/2} K H_t^{1/2}`` over a fixed RBF Gram matrix with
+    the Newton-drifting diagonal ``H_t`` of a logistic likelihood — the
+    paper's sequence of related SPD systems, deterministic by seed.
+    """
+    from repro.gp import RBFKernel
+
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.standard_normal((_N, 4)))
+    kmat = RBFKernel(theta=2.0, lengthscale=1.5).gram(x)
+
+    ops, bs = [], []
+    f = jnp.asarray(rng.standard_normal(_N) * 0.3)
+    y = jnp.asarray(np.sign(rng.standard_normal(_N)))
+    for t in range(_NUM_SYSTEMS):
+        pi = jax.nn.sigmoid(f)
+        sqrt_h = jnp.sqrt(pi * (1.0 - pi))
+        ops.append(sqrt_h)
+        bs.append(sqrt_h * (y - pi) + 0.1 * f)
+        f = f + 0.35 * jnp.asarray(rng.standard_normal(_N))
+    return kmat, jnp.stack(ops), jnp.stack(bs)
+
+
+def _indefinite_problem():
+    rng = np.random.default_rng(3)
+    q, _ = np.linalg.qr(rng.standard_normal((48, 48)))
+    eigs = np.concatenate([np.linspace(0.5, 4.0, 44), [-1.0, -0.2, 2.0, 9.0]])
+    mat = jnp.asarray((q * eigs) @ q.T)
+    b = jnp.asarray(rng.standard_normal(48))
+    return mat, b
+
+
+def _run_all():
+    """Execute the pinned scenarios; returns a dict of numpy arrays."""
+    from repro.core import (
+        KernelSystemOperator,
+        SolveSpec,
+        cg,
+        from_matrix,
+        solve,
+        solve_sequence,
+    )
+
+    kmat, sqrt_hs, bs = _fig2_newton_trace()
+    out = {}
+
+    # -- plain CG on the first Newton system -----------------------------
+    op0 = KernelSystemOperator(lambda v: kmat @ v, sqrt_hs[0])
+    res = cg(op0, bs[0], tol=1e-10, maxiter=600)
+    out["cg_x"] = np.asarray(res.x)
+    out["cg_iterations"] = np.asarray(res.info.iterations)
+    out["cg_matvecs"] = np.asarray(res.info.matvecs)
+    out["cg_status"] = np.asarray(res.info.status)
+    out["cg_residual_norm"] = np.asarray(res.info.residual_norm)
+
+    # -- def-CG sequence over the drifting Newton trace ------------------
+    spec = SolveSpec(method="defcg", k=_K, ell=_ELL, tol=1e-9, maxiter=600)
+    seq = solve_sequence(
+        sqrt_hs,
+        bs,
+        spec,
+        make_operator=lambda sh: KernelSystemOperator(
+            lambda v: kmat @ v, sh
+        ),
+    )
+    out["seq_x"] = np.asarray(seq.x)
+    out["seq_iterations"] = np.asarray(seq.info.iterations)
+    out["seq_matvecs"] = np.asarray(seq.info.matvecs)
+    out["seq_status"] = np.asarray(seq.info.status)
+    out["seq_residual_norm"] = np.asarray(seq.info.residual_norm)
+    out["seq_theta"] = np.asarray(seq.theta)
+    out["seq_rung"] = np.asarray(seq.report.rung)
+    out["seq_final_W"] = np.asarray(seq.state.W)
+    out["seq_final_AW"] = np.asarray(seq.state.AW)
+
+    # -- recovery-ladder behavior on an indefinite operator --------------
+    mat, b = _indefinite_problem()
+    bad_spec = SolveSpec(method="defcg", k=3, ell=6, tol=1e-8, maxiter=300,
+                         recovery_rungs=3, recovery_shift=1e-6)
+    # A warm basis forces the deflated path; the indefinite spectrum
+    # breaks it, so the ladder must climb — pin the rung it lands on.
+    warm = solve(from_matrix(jnp.asarray(np.eye(48) * 2.0)), b, bad_spec)
+    res_bad = solve(from_matrix(mat), b, bad_spec, warm.state)
+    out["ladder_status"] = np.asarray(res_bad.info.status)
+    out["ladder_rung"] = np.asarray(res_bad.report.rung)
+    out["ladder_matvecs"] = np.asarray(res_bad.info.matvecs)
+    out["ladder_x"] = np.asarray(res_bad.x)
+    return out
+
+
+@pytest.fixture(scope="module")
+def golden():
+    if not os.path.exists(GOLDEN):
+        pytest.skip("golden trajectory file missing — regenerate with "
+                    "`python tests/test_trajectory_pin.py`")
+    with np.load(GOLDEN) as z:
+        return dict(z)
+
+
+@pytest.fixture(scope="module")
+def current():
+    return _run_all()
+
+
+def test_cg_trajectory_bit_identical(golden, current):
+    for key in ("cg_x", "cg_iterations", "cg_matvecs", "cg_status",
+                "cg_residual_norm"):
+        np.testing.assert_array_equal(current[key], golden[key], err_msg=key)
+
+
+def test_defcg_sequence_bit_identical(golden, current):
+    for key in ("seq_x", "seq_iterations", "seq_matvecs", "seq_status",
+                "seq_residual_norm", "seq_theta", "seq_rung",
+                "seq_final_W", "seq_final_AW"):
+        np.testing.assert_array_equal(current[key], golden[key], err_msg=key)
+
+
+def test_recovery_ladder_bit_identical(golden, current):
+    for key in ("ladder_status", "ladder_rung", "ladder_matvecs",
+                "ladder_x"):
+        np.testing.assert_array_equal(current[key], golden[key], err_msg=key)
+
+
+if __name__ == "__main__":
+    os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
+    np.savez_compressed(GOLDEN, **_run_all())
+    print(f"wrote {GOLDEN}")
