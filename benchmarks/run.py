@@ -24,6 +24,10 @@ Sections:
              products (win regime AND the flat-spectrum null result)
              + the fused lsmr_update recurrence
   kernel   — fused-kernel micro-benchmarks
+  shard    — device-mesh solver: per-iteration def-CG cost at device
+             counts {1, 4, 8}, the one-all-reduce-per-while-body pin
+             counted from compiled HLO, and a sharded fused RBF matvec
+             at n = 1e5 (K never materialized)
   roofline — dry-run derived roofline table (if artifacts exist)
 """
 
@@ -34,6 +38,16 @@ import os
 import sys
 import time
 import traceback
+
+# The shard section benches mesh sizes up to 8; force 8 host devices
+# BEFORE anything imports jax (benchmarks.common does, inside main()).
+if "xla_force_host_platform_device_count" not in os.environ.get(
+    "XLA_FLAGS", ""
+):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=8"
+    ).strip()
 
 
 def main() -> None:
@@ -66,6 +80,7 @@ def main() -> None:
         paper_table1,
         seq_bench,
         serve_bench,
+        shard_bench,
         solver_microbench,
     )
 
@@ -80,6 +95,7 @@ def main() -> None:
     section("hf", hf_recycle_bench.run)
     section("lsq", lsq_bench.run)
     section("kernel", kernel_bench.run)
+    section("shard", shard_bench.run)
 
     art = os.path.join(os.path.dirname(__file__), "../artifacts/dryrun")
     if os.path.isdir(art) and os.listdir(art):

@@ -378,6 +378,7 @@ def solve(
     M=None,
     record_residuals: bool = False,
     batch_axis: Optional[str] = None,
+    mesh=None,
 ) -> SolveResult:
     """Solve one SPD system ``A x = b`` per ``spec``, carrying ``state``.
 
@@ -410,8 +411,34 @@ def solve(
     ``batch_axis`` names the ``vmap`` axis when this solve is lifted
     over tenants (``solve_batch`` sets it) — it arms the recording
     scan's cross-tenant matvec gate; leave ``None`` otherwise.
+
+    ``mesh`` opts into the SPMD engine: pass a 1-D ``"solve"`` mesh
+    (:func:`repro.launch.mesh.make_solve_mesh`) and the solve runs
+    n-sharded across its devices through
+    :func:`repro.core.sharded.solve_sharded` — one all-reduce per
+    def-CG/CG iteration, operator data row-sharded.  ``mesh=None`` (the
+    default) is the unchanged single-device path; the two differ only in
+    the (documented) sharded-path restrictions — no preconditioner, no
+    recovery ladder, ``cg``/``defcg``/``lsmr`` only.
     """
     spec = SolveSpec() if spec is None else spec
+    if mesh is not None:
+        if M is not None:
+            raise ValueError(
+                "the sharded engine has no preconditioner path — M must "
+                "be None when mesh= is given"
+            )
+        if batch_axis is not None:
+            raise ValueError(
+                "mesh= and batch_axis= do not compose — shard one solve "
+                "or vmap many, not both"
+            )
+        from repro.core import sharded as sharded_mod
+
+        return sharded_mod.solve_sharded(
+            A, b, spec, state, mesh=mesh, x0=x0,
+            record_residuals=record_residuals,
+        )
     _check_m(spec, M)
 
     if spec.method in _LSQ_METHODS:
@@ -554,7 +581,7 @@ def solve(
 
 
 solve_jit = jax.jit(
-    solve, static_argnames=("spec", "record_residuals", "batch_axis")
+    solve, static_argnames=("spec", "record_residuals", "batch_axis", "mesh")
 )
 
 

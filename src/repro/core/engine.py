@@ -181,6 +181,28 @@ def stagnation_update(stag, rnorm_new, fail, active, window: int):
     return stag, fail
 
 
+def psum_merged(parts, axis_name: str):
+    """Batch several small reductions into ONE ``psum`` collective.
+
+    ``parts`` is a sequence of per-shard partial reductions (scalars or
+    1-D arrays, e.g. ``[pᵀap, rᵀap, apᵀap, AW@ap]``); they are packed
+    into one flat vector, reduced with a single ``lax.psum`` over
+    ``axis_name``, and unpacked to the original shapes.  This is the
+    sharded engine's one-all-reduce-per-iteration contract (DESIGN.md
+    §5): every scalar reduction of an iteration must ride this ONE
+    collective — the HLO collective-counting pass
+    (:func:`repro.launch.hlo_stats.while_body_collectives`) pins it.
+    """
+    flats = [jnp.ravel(jnp.asarray(p)) for p in parts]
+    packed = flats[0] if len(flats) == 1 else jnp.concatenate(flats)
+    red = jax.lax.psum(packed, axis_name)
+    out, off = [], 0
+    for p, f in zip(parts, flats):
+        out.append(jnp.reshape(red[off : off + f.shape[0]], jnp.shape(p)))
+        off += f.shape[0]
+    return out
+
+
 def gated_matvec(
     apply, v, active, batch_axis: Optional[str], out_like=None
 ):

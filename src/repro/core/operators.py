@@ -288,6 +288,71 @@ class KernelSystemOperator:
         return cls(kernel_matvec, sqrt_h, cost)
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class RBFKernelSystemOperator:
+    """The GP Newton operator with its DATA as pytree leaves — shardable.
+
+    Same math as :class:`KernelSystemOperator` specialized to the RBF
+    Gram kernel, ``A v = v + H^{1/2} · K(X, X) (H^{1/2} · v)``, but the
+    training data ``x`` and the likelihood diagonal ``sqrt_h`` are
+    pytree CHILDREN instead of being baked into a matvec closure.  That
+    is what makes the operator mesh-shardable (DESIGN.md §5): under the
+    sharded engine each device keeps a ROW block of ``x``/``sqrt_h``
+    local, the matvec all-gathers the scaled vector once per iteration,
+    and the local K-tiles are formed and consumed on the fly
+    (:func:`repro.kernels.ops.rbf_matvec_rect`) — n = 10⁵–10⁶ solves
+    never materialize the n×n Gram matrix.  On one device it behaves
+    exactly like ``KernelSystemOperator`` over the fused/chunked Gram
+    matvec (and, being leaf-carrying, same-shape systems share one
+    ``solve_jit`` trace, like :class:`DenseMatrixOperator`).
+
+    ``theta``/``lengthscale``/``block``/``impl`` are static aux data —
+    hyperparameter *values* bake into the trace; the kernel wrapper
+    pre-scales inputs so the Pallas kernel itself never recompiles.
+    """
+
+    x: jnp.ndarray  # (n, d) training inputs
+    sqrt_h: jnp.ndarray  # (n,) H^{1/2} diagonal
+    theta: float = 1.0
+    lengthscale: float = 1.0
+    block: int = 1024
+    impl: str = "auto"
+
+    def kernel_matvec(self, u: jnp.ndarray) -> jnp.ndarray:
+        """``K(X, X) @ u`` — (n,) or column-stacked (n, r)."""
+        from repro.kernels import ops as kops
+
+        return kops.rbf_matvec(
+            self.x, u, self.theta, self.lengthscale,
+            impl=self.impl, block=self.block,
+        )
+
+    def matvec(self, v: jnp.ndarray) -> jnp.ndarray:
+        return v + self.sqrt_h * self.kernel_matvec(self.sqrt_h * v)
+
+    def basis_matvec(self, basis: jnp.ndarray) -> jnp.ndarray:
+        v = (basis * self.sqrt_h[None, :]).T  # (n, m) column-stacked
+        return basis + self.sqrt_h[None, :] * self.kernel_matvec(v).T
+
+    def __call__(self, v):
+        return self.matvec(v)
+
+    def __matmul__(self, v):
+        return self.matvec(v)
+
+    def tree_flatten(self):
+        return (self.x, self.sqrt_h), (
+            self.theta, self.lengthscale, self.block, self.impl,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        x, sqrt_h = children
+        theta, lengthscale, block, impl = aux
+        return cls(x, sqrt_h, theta, lengthscale, block, impl)
+
+
 # ---------------------------------------------------------------------------
 # Gauss-Newton operator — Hessian-free optimization at LM scale
 # ---------------------------------------------------------------------------

@@ -167,6 +167,7 @@ def harmonic_ritz_flat_core(
     select: str = "largest",
     jitter: float = 1e-10,
     m_apply: Optional[FlatApply] = None,
+    psum_axis: Optional[str] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Masked flat harmonic-Ritz extraction; the strategies' shared math.
 
@@ -192,8 +193,16 @@ def harmonic_ritz_flat_core(
     stale-mode strategy this is where the next basis AND its operator
     products come from, at zero matvecs.
 
+    ``psum_axis`` names a mesh axis the length-n coordinate dimension is
+    sharded over (the sharded engine's ``"solve"`` axis): the stacked
+    self-gram and the column norms — the only n-reductions here — are
+    computed per-shard and ``psum``-combined, everything downstream (the
+    (2m, 2m) eigenproblems, the selection) is replicated arithmetic, and
+    the recombination GEMM stays per-shard.  ``None`` (the default) is
+    the unsharded path, bit-identical to before the axis existed.
+
     Returns ``(W, AW, theta, fasym)`` of shapes
-    ``(k, n), (k, n), (k,), ()``.
+    ``(k, n), (k, n), (k,), ()`` — n per-shard under ``psum_axis``.
     """
     m = Z.shape[0]
     if k > m:
@@ -206,6 +215,10 @@ def harmonic_ritz_flat_core(
     S2 = jnp.concatenate([Z, AZ], axis=0)  # (2m, n): gram + recombination
     if m_apply is None:
         full = kops.self_gram(S2)  # (2m, 2m)
+        if psum_axis is not None:
+            # Per-shard gram over the local n-columns; ONE collective
+            # replicates the full (2m, 2m) gram on every shard.
+            full = jax.lax.psum(full, psum_axis)
         # Quadrants: ⎡ZZᵀ  ·⎤ — diag(ZZᵀ) are the column norms, the lower
         #            ⎣F    G⎦   blocks are the projection grams.
         zz = jnp.diag(full[:m, :m])
@@ -216,6 +229,8 @@ def harmonic_ritz_flat_core(
         # single self-gram GEMM now also contains G = (AZ)(M⁻¹AZ)ᵀ.
         MAZ = jax.vmap(m_apply)(AZ)
         full = kops.self_gram(jnp.concatenate([S2, MAZ], axis=0))
+        if psum_axis is not None:
+            full = jax.lax.psum(full, psum_axis)
         zz = jnp.diag(full[:m, :m])
         F_raw = full[m : 2 * m, :m]
         G = full[m : 2 * m, 2 * m :]
@@ -266,7 +281,10 @@ def harmonic_ritz_flat_core(
     WA = kops.recombine_blocks(S2, u)  # (2k, n)
     W, AW = WA[:k], WA[k:]
 
-    wn = jnp.sqrt(jnp.maximum(jnp.sum(W * W, axis=1), jnp.finfo(u.dtype).tiny))
+    wsq = jnp.sum(W * W, axis=1)
+    if psum_axis is not None:
+        wsq = jax.lax.psum(wsq, psum_axis)
+    wn = jnp.sqrt(jnp.maximum(wsq, jnp.finfo(u.dtype).tiny))
     col_scale = jnp.where(slot_ok, 1.0 / wn, 0.0).astype(W.dtype)
     W = W * col_scale[:, None]
     AW = AW * col_scale[:, None]
@@ -284,13 +302,16 @@ def extract_next_basis_core(
     select: str = "largest",
     jitter: float = 1e-10,
     m_apply: Optional[FlatApply] = None,
+    psum_axis: Optional[str] = None,
 ):
     """One cross-system extraction on the flat engine.
 
     ``Z = [W, P]`` with a traced validity mask: W rows are valid where
     nonzero (clamped slots are exact zeros), P rows where their index is
     below the dynamic ``stored`` count.  Shape-static throughout.
-    Returns ``(W, AW, theta, fasym)``.
+    ``psum_axis`` (see :func:`harmonic_ritz_flat_core`) marks the
+    n-dimension as sharded — the W-row validity norms join the gram's
+    cross-shard reductions.  Returns ``(W, AW, theta, fasym)``.
     """
     ell = p_flat.shape[0]
     p_valid = jnp.arange(ell) < stored
@@ -299,10 +320,14 @@ def extract_next_basis_core(
     else:
         Z = jnp.concatenate([w_flat, p_flat], axis=0)
         AZ = jnp.concatenate([aw_flat, ap_flat], axis=0)
-        w_valid = jnp.sum(w_flat * w_flat, axis=1) > 0
+        wsq = jnp.sum(w_flat * w_flat, axis=1)
+        if psum_axis is not None:
+            wsq = jax.lax.psum(wsq, psum_axis)
+        w_valid = wsq > 0
         valid = jnp.concatenate([w_valid, p_valid])
     return harmonic_ritz_flat_core(
-        Z, AZ, k, valid=valid, select=select, jitter=jitter, m_apply=m_apply
+        Z, AZ, k, valid=valid, select=select, jitter=jitter,
+        m_apply=m_apply, psum_axis=psum_axis,
     )
 
 

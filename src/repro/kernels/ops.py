@@ -41,7 +41,7 @@ from repro.kernels.cg_fused import (
     self_gram_pallas,
 )
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.rbf_matvec import rbf_matvec_pallas
+from repro.kernels.rbf_matvec import rbf_matvec_pallas, rbf_matvec_rect_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
 _NEG_INF = -1e30
@@ -112,6 +112,69 @@ def _rbf_matvec_chunked(xs: jnp.ndarray, vs: jnp.ndarray, block: int):
 
     _, ys = jax.lax.scan(body, None, xp.reshape(-1, nb, d))
     return ys.reshape(n_pad, vs.shape[1])[:n]
+
+
+def rbf_matvec_rect(
+    x_rows: jnp.ndarray,
+    x_cols: jnp.ndarray,
+    v: jnp.ndarray,
+    theta: float,
+    lengthscale: float,
+    *,
+    impl: str = "auto",
+    block: int = 256,
+) -> jnp.ndarray:
+    """Rectangular Gram matvec ``K(X_rows, X_cols) @ v``, no O(m·n) memory.
+
+    The sharded-operator primitive (DESIGN.md §5): each shard of the
+    ``"solve"`` mesh keeps its local ROW block of the data and contracts
+    it against the full (all-gathered) column set — one call per shard,
+    K never materialized.  ``x_rows`` is ``(m, d)``, ``x_cols`` ``(n, d)``,
+    ``v`` ``(n,)`` or ``(n, r)``; output ``(m,)`` / ``(m, r)``.  The
+    square :func:`rbf_matvec` is the ``x_rows is x_cols`` special case.
+    """
+    squeeze = v.ndim == 1
+    v2 = v[:, None] if squeeze else v
+    impl = _resolve(impl)
+    if impl in ("pallas", "interpret"):
+        out = rbf_matvec_rect_pallas(
+            x_rows / lengthscale,
+            x_cols / lengthscale,
+            (theta**2) * v2,
+            block_m=block,
+            block_n=block,
+            interpret=(impl == "interpret"),
+        )
+    elif impl == "reference":
+        out = ref.rbf_matvec_rect(x_rows, x_cols, v2, theta, lengthscale)
+    elif impl == "chunked":
+        out = _rbf_matvec_rect_chunked(
+            x_rows / lengthscale, x_cols / lengthscale, (theta**2) * v2, block
+        )
+    else:
+        raise ValueError(f"unknown impl={impl!r}")
+    return out[:, 0] if squeeze else out
+
+
+def _rbf_matvec_rect_chunked(
+    xr: jnp.ndarray, xc: jnp.ndarray, vs: jnp.ndarray, block: int
+):
+    """Row-blocked rectangular Gram matvec — the chunked twin of
+    :func:`_rbf_matvec_chunked` with distinct row/column data."""
+    m, d = xr.shape
+    nb = max(1, block)
+    m_pad = ((m + nb - 1) // nb) * nb
+    xp = jnp.pad(xr, ((0, m_pad - m), (0, 0)))
+    sq_cols = jnp.sum(xc * xc, axis=1)
+
+    def body(_, xi):
+        sq_i = jnp.sum(xi * xi, axis=1, keepdims=True)
+        cross = xi @ xc.T
+        d2 = jnp.maximum(sq_i + sq_cols[None, :] - 2.0 * cross, 0.0)
+        return None, jnp.exp(-0.5 * d2) @ vs
+
+    _, ys = jax.lax.scan(body, None, xp.reshape(-1, nb, d))
+    return ys.reshape(m_pad, vs.shape[1])[:m]
 
 
 # ---------------------------------------------------------------------------

@@ -128,5 +128,64 @@ def rbf_matvec_pallas(
     return out[:n, :r]
 
 
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "interpret")
+)
+def rbf_matvec_rect_pallas(
+    x_rows: jnp.ndarray,
+    x_cols: jnp.ndarray,
+    v_scaled: jnp.ndarray,
+    *,
+    block_m: int = 256,
+    block_n: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Rectangular Gram matvec ``y = exp(−½‖xr_i − xc_j‖²) V``.
+
+    The sharded-operator building block: each shard holds a ROW block of
+    the data (``x_rows``, its local (m, d) slice) and applies the full
+    column set (``x_cols``, the all-gathered (n, d) data) to the gathered
+    right-hand sides — the K-tile for (local rows × all columns) is
+    formed and consumed in VMEM, never materialized.  The kernel body is
+    :func:`_rbf_matvec_kernel` unchanged (the square wrapper just passes
+    the same array for both row and column data); only the padding and
+    grid differ.
+    """
+    m, d = x_rows.shape
+    n, _ = x_cols.shape
+    _, r = v_scaled.shape
+
+    bm = min(block_m, max(_round_up(m, 8), 8))
+    bn = min(block_n, max(_round_up(n, 8), 8))
+    m_pad = _round_up(m, bm)
+    n_pad = _round_up(n, bn)
+    d_pad = _round_up(d, 128)
+    r_pad = _round_up(r, 8)
+
+    xr_p = jnp.pad(x_rows, ((0, m_pad - m), (0, d_pad - d)))
+    xc_p = jnp.pad(x_cols, ((0, n_pad - n), (0, d_pad - d)))
+    v_p = jnp.pad(v_scaled, ((0, n_pad - n), (0, r_pad - r)))
+
+    grid = (m_pad // bm, n_pad // bn)
+    out = pl.pallas_call(
+        _rbf_matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d_pad), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, r_pad), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, r_pad), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, r_pad), v_scaled.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, r_pad), jnp.float32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="rbf_gram_matvec_rect",
+    )(xr_p, xc_p, v_p)
+    return out[:m, :r]
+
+
 def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m

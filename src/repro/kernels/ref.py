@@ -36,6 +36,26 @@ def rbf_matvec(
     return k @ v
 
 
+def rbf_matvec_rect(
+    x_rows: jnp.ndarray,
+    x_cols: jnp.ndarray,
+    v: jnp.ndarray,
+    theta: float,
+    lengthscale: float,
+) -> jnp.ndarray:
+    """``K(X_rows, X_cols) @ v`` by materializing the rectangular Gram
+    block — oracle for the sharded-operator row-tile kernel."""
+    xr = x_rows / lengthscale
+    xc = x_cols / lengthscale
+    d2 = (
+        jnp.sum(xr * xr, 1)[:, None]
+        + jnp.sum(xc * xc, 1)[None, :]
+        - 2.0 * (xr @ xc.T)
+    )
+    d2 = jnp.maximum(d2, 0.0)
+    return (theta**2) * jnp.exp(-0.5 * d2) @ v
+
+
 # ---------------------------------------------------------------------------
 # Fused CG iteration updates — oracles for cg_fused
 # ---------------------------------------------------------------------------

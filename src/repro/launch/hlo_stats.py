@@ -55,8 +55,25 @@ _SHAPE_ELEM_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
 _DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
 _OPNAME_RE = re.compile(r"^(?:\(.*?\)|\w+\[[0-9,]*\]\S*)\s+([\w\-]+)[\.\d]*\(")
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
-_CALLED_RE = re.compile(r"(?:body|calls|to_apply|branch_computations)=\{?%?([\w\.\-]+)")
+# Single-name callee attributes.  branch_computations={a, b} needs its own
+# handling (a findall of this pattern would only surface the FIRST branch);
+# true_computation= / false_computation= are the two-way conditional's
+# spelling in older HLO text.
+_CALLED_RE = re.compile(
+    r"(?:body|condition|calls|to_apply|true_computation|false_computation)"
+    r"=%?([\w\.\-]+)"
+)
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
 _OPERANDS_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _callees(line: str) -> List[str]:
+    """Every sub-computation a line references — all conditional
+    branches included, not just the first."""
+    names = _CALLED_RE.findall(line)
+    for blk in _BRANCHES_RE.findall(line):
+        names.extend(re.findall(r"%?([\w\.\-]+)", blk))
+    return names
 
 
 def _shape_bytes(text: str) -> int:
@@ -167,7 +184,10 @@ def analyze(hlo: str) -> dict:
                 if cm:
                     edges[c.name].append((cm.group(1), trip))
             else:
-                for callee in _CALLED_RE.findall(line):
+                # Conditional branches all get multiplicity 1 — a
+                # worst-case upper bound (XLA executes one per visit);
+                # previously only the first branch was even counted.
+                for callee in _callees(line):
                     edges[c.name].append((callee, 1.0))
     mult = _fixpoint_mult(edges, comps)
 
@@ -237,6 +257,11 @@ def analyze(hlo: str) -> dict:
                 op_base = op_base[: -len("-start")]
             if op_base in COLLECTIVE_OPS and not op.endswith("-done"):
                 b = _shape_bytes(rshape)
+                if op.endswith("-start") and rshape.startswith("("):
+                    # An async start's result tuple aliases the operand
+                    # next to the destination buffer — halve so the
+                    # -start/-done pair is charged ONE payload.
+                    b //= 2
                 coll[op_base]["count"] += m
                 coll[op_base]["bytes"] += m * b
                 coll_items.append(
@@ -290,3 +315,101 @@ def op_census(hlo_text: str, ops=("fusion", "custom-call", "while", "sort")):
     for op in ops:
         out[op] = len(re.findall(rf"=\s*[^=]*\b{op}[.\d]*\(", hlo_text))
     return out
+
+
+# ---------------------------------------------------------------------------
+# Static collective counting — the sharded engine's communication gates
+# ---------------------------------------------------------------------------
+
+
+def _line_collective(rest: str) -> str:
+    """The collective base op a definition line holds, else ``""``.
+
+    An async pair counts ONCE: the ``-start`` carries the payload and is
+    counted; the matching ``-done`` is skipped.  (CPU HLO emits the plain
+    sync form, GPU/TPU pipelines emit the async pair — both spell one
+    collective.)
+    """
+    om = _OPNAME_RE.match(rest)
+    if not om:
+        return ""
+    op = om.group(1)
+    if op.endswith("-done"):
+        return ""
+    base = op[: -len("-start")] if op.endswith("-start") else op
+    return base if base in COLLECTIVE_OPS else ""
+
+
+def count_collectives(hlo: str) -> Dict[str, int]:
+    """Static per-module collective instruction census.
+
+    Counts each collective op kind across ALL computations of the module
+    text — no multiplicity weighting (use :func:`analyze` for the
+    while-corrected dynamic view).  One ``-start``/``-done`` async pair
+    counts as ONE collective.
+    """
+    counts: Dict[str, int] = {op: 0 for op in COLLECTIVE_OPS}
+    for line in hlo.splitlines():
+        dm = _DEF_RE.match(line)
+        if not dm:
+            continue
+        base = _line_collective(dm.group(2))
+        if base:
+            counts[base] += 1
+    return counts
+
+
+def while_body_collectives(hlo: str) -> Dict[str, Dict[str, int]]:
+    """Per-while-body collective counts — the one-all-reduce-per-iteration
+    gate of the sharded engine (DESIGN.md §5).
+
+    For every ``while`` body in the module, counts the collectives the
+    body executes per iteration, descending transitively through
+    ``calls=``/``to_apply=`` and conditional branches (ALL branches — a
+    worst-case per-iteration bound) but NOT into nested ``while`` bodies:
+    a nested loop's per-iteration cost is its own row of the result.
+
+    Returns ``{body_name: {op: count}}`` with async ``-start``/``-done``
+    pairs counted once.  The sharded def-CG while body must show exactly
+    ``{"all-reduce": 1}`` (plus the matvec's gather); the test suite
+    pins it via :func:`repro.core.sharded.lower_sharded`.
+    """
+    comps = _split_computations(hlo)
+    bodies: List[str] = []
+    for c in comps.values():
+        for line in c.lines:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            om = _OPNAME_RE.match(dm.group(2))
+            if om and om.group(1) == "while":
+                bm = re.search(r"body=%?([\w\.\-]+)", line)
+                if bm:
+                    bodies.append(bm.group(1))
+
+    def count_comp(name: str, seen: set) -> Dict[str, int]:
+        c = comps.get(name)
+        totals: Dict[str, int] = defaultdict(int)
+        if c is None:
+            return totals
+        for line in c.lines:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            rest = dm.group(2)
+            om = _OPNAME_RE.match(rest)
+            op = om.group(1) if om else ""
+            if op == "while":
+                continue  # nested loop: charged to its own body's row
+            base = _line_collective(rest)
+            if base:
+                totals[base] += 1
+            for callee in _callees(line):
+                if callee in seen:
+                    continue
+                seen.add(callee)
+                for k, v in count_comp(callee, seen).items():
+                    totals[k] += v
+        return totals
+
+    return {name: dict(count_comp(name, {name})) for name in bodies}

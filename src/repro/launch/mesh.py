@@ -32,6 +32,54 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.models import sharding as shd
 
 
+def make_solve_mesh(n_devices: Optional[int] = None) -> Mesh:
+    """The 1-D solver mesh: ``(n,) = ("solve",)`` over whatever exists.
+
+    The axis every length-n dimension of the sharded Krylov engine
+    (:mod:`repro.core.sharded`) shards over — solve vectors ``P("solve")``,
+    ``(k, n)`` recycle bases ``P(None, "solve")``, operator data rows
+    ``P("solve", ...)``.  Unlike :func:`make_production_mesh` there is no
+    hard device-count requirement: ``n_devices=None`` takes every device
+    jax sees (1 on a laptop CPU, 8 under
+    ``xla_force_host_platform_device_count=8``, a full slice on TPU);
+    an explicit count takes the first ``n_devices`` of them.
+    """
+    devices = jax.devices()
+    n = len(devices) if n_devices is None else int(n_devices)
+    if not 1 <= n <= len(devices):
+        raise ValueError(
+            f"n_devices={n_devices} out of range: this process has "
+            f"{len(devices)} devices"
+        )
+    return jax.make_mesh((n,), ("solve",), devices=devices[:n])
+
+
+def solve_state_shardings(mesh: Mesh) -> Any:
+    """NamedSharding pytree for a :class:`repro.core.recycle.RecycleState`
+    on the solve mesh — W/AW column-sharded along n, scalars replicated
+    (the PartitionSpec rules live in :func:`repro.core.sharded.recycle_state_specs`)."""
+    from repro.core import sharded as sharded_mod
+    from repro.core.recycle import RecycleState
+
+    s = sharded_mod.recycle_state_specs()
+    # Explicit construction — PartitionSpec is a tuple subclass, so a
+    # tree_map over a spec-valued pytree would descend into the specs.
+    return RecycleState(
+        W=NamedSharding(mesh, s.W),
+        AW=NamedSharding(mesh, s.AW),
+        theta=NamedSharding(mesh, s.theta),
+        systems_solved=NamedSharding(mesh, s.systems_solved),
+        drift=NamedSharding(mesh, s.drift),
+    )
+
+
+def solve_vector_sharding(mesh: Mesh) -> NamedSharding:
+    """NamedSharding of a flat length-n solve vector on the solve mesh."""
+    from repro.core import sharded as sharded_mod
+
+    return NamedSharding(mesh, sharded_mod.vector_spec())
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

@@ -2,8 +2,15 @@
 
 x64 is enabled globally for the test session: solver correctness tests
 need double precision, and all model code passes explicit dtypes so this
-does not perturb the (bf16/f32) smoke tests.  Device count stays 1 — only
-`repro/launch/dryrun.py` (a separate process) requests 512 host devices.
+does not perturb the (bf16/f32) smoke tests.
+
+The test process forces EIGHT host platform devices (before jax is first
+imported — the flag is read at backend initialization): the sharded
+Krylov engine's parity and collective-count suite
+(tests/test_sharded_engine.py) needs a real multi-device mesh, and every
+single-device test is oblivious to the extra devices because jax places
+un-annotated computations on device 0.  Only `repro/launch/dryrun.py` (a
+separate process) requests more (512).
 
 ``hypothesis`` is optional: CI boxes without it still collect and run the
 full deterministic suite — a stub module is installed so the
@@ -11,8 +18,17 @@ full deterministic suite — a stub module is installed so the
 every ``@given``-decorated property test is skipped.
 """
 
+import os
 import sys
 import types
+
+if "xla_force_host_platform_device_count" not in os.environ.get(
+    "XLA_FLAGS", ""
+):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=8"
+    ).strip()
 
 import jax
 import numpy as np

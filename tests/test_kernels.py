@@ -85,6 +85,64 @@ class TestRBFMatvec:
         np.testing.assert_allclose(multi, singles, rtol=1e-5, atol=1e-5)
 
 
+class TestRBFMatvecRect:
+    """Rectangular Gram matvec ``K(X_rows, X_cols) @ v`` — the sharded
+    operator's per-shard primitive (DESIGN.md §5)."""
+
+    @pytest.mark.parametrize("impl", ["interpret", "chunked"])
+    @pytest.mark.parametrize("m,n,d,r", [(48, 96, 3, 1), (33, 200, 11, 4)])
+    def test_matches_oracle(self, impl, m, n, d, r):
+        rng = np.random.default_rng(m + n + d)
+        xr = jnp.asarray(rng.standard_normal((m, d)), F32)
+        xc = jnp.asarray(rng.standard_normal((n, d)), F32)
+        v = jnp.asarray(rng.standard_normal((n, r)), F32)
+        theta, ls = 1.3, 2.1
+        want = np.asarray(
+            ref.rbf_matvec_rect(
+                xr.astype(jnp.float64),
+                xc.astype(jnp.float64),
+                v.astype(jnp.float64),
+                theta,
+                ls,
+            )
+        )
+        got = np.asarray(
+            ops.rbf_matvec_rect(xr, xc, v, theta, ls, impl=impl, block=32)
+        )
+        assert got.shape == (m, r)
+        scale = max(1.0, np.abs(want).max())
+        np.testing.assert_allclose(got / scale, want / scale, **_tol(F32))
+
+    def test_square_case_equals_rbf_matvec(self):
+        rng = np.random.default_rng(9)
+        x = jnp.asarray(rng.standard_normal((70, 4)), F32)
+        v = jnp.asarray(rng.standard_normal((70,)), F32)
+        sq = ops.rbf_matvec(x, v, 0.9, 1.4, impl="chunked", block=32)
+        rect = ops.rbf_matvec_rect(x, x, v, 0.9, 1.4, impl="chunked", block=32)
+        assert rect.shape == (70,)
+        np.testing.assert_allclose(rect, sq, rtol=1e-5, atol=1e-5)
+
+    def test_row_blocks_concatenate_to_full_matvec(self):
+        # The sharding identity the mesh operator relies on: every shard
+        # computes K(X_local, X_full) @ v and the concatenation of the
+        # row-block outputs IS the full square matvec.
+        rng = np.random.default_rng(11)
+        n, d, shards = 96, 5, 4
+        x = jnp.asarray(rng.standard_normal((n, d)), F32)
+        v = jnp.asarray(rng.standard_normal((n,)), F32)
+        full = ops.rbf_matvec(x, v, 1.1, 0.8, impl="chunked", block=16)
+        blocks = [
+            ops.rbf_matvec_rect(
+                x[i * (n // shards):(i + 1) * (n // shards)],
+                x, v, 1.1, 0.8, impl="chunked", block=16,
+            )
+            for i in range(shards)
+        ]
+        np.testing.assert_allclose(
+            jnp.concatenate(blocks), full, rtol=1e-5, atol=1e-5
+        )
+
+
 # ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------
